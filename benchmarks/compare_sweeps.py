@@ -1,0 +1,27 @@
+"""Compare baseline vs final dry-run sweeps for EXPERIMENTS.md §Perf."""
+import json, sys
+
+def load(p):
+    out = {}
+    for line in open(p):
+        r = json.loads(line)
+        out[(r["arch"], r.get("shape"), r["mesh"])] = r
+    return out
+
+base = load("dryrun_baseline.jsonl")
+final = load("dryrun_final.jsonl")
+print(f"{'cell':46s} {'dom':10s} {'t_dom before':>12s} {'after':>8s} {'Δ%':>6s} "
+      f"{'temp before':>11s} {'after':>7s} {'useful b→a':>10s}")
+for key in sorted(final.keys()):
+    if key not in base: continue
+    b, f = base[key], final[key]
+    if b["status"] != "ok" or f["status"] != "ok": continue
+    rb, rf = b["roofline"], f["roofline"]
+    dom = rb["dominant"]
+    tb = rb[f"t_{dom}" if dom != "collective" else "t_collective"]
+    tf = rf[f"t_{dom}" if dom != "collective" else "t_collective"]
+    mb = b["memory"].get("temp_size_in_bytes", 0)/1e9
+    mf = f["memory"].get("temp_size_in_bytes", 0)/1e9
+    d = 100*(tf-tb)/tb if tb else 0
+    print(f"{key[0]+'/'+str(key[1])+'@'+key[2]:46s} {dom:10s} {tb:12.2f} {tf:8.2f} {d:5.0f}% "
+          f"{mb:10.1f}G {mf:6.1f}G {rb['useful_ratio']:.2f}→{rf['useful_ratio']:.2f}")

@@ -1,0 +1,47 @@
+"""Quickstart: count triangles three ways (the paper's three formulations).
+
+    PYTHONPATH=src python examples/quickstart.py [--scale 10]
+"""
+
+import argparse
+import time
+
+from repro.graphs import rmat_graph, grid_graph
+from repro.core import (
+    triangle_count_intersection, triangle_count_matrix,
+    triangle_count_subgraph, triangle_count_scipy,
+    clustering_coefficients, transitivity, enumerate_triangles,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=10)
+    args = ap.parse_args()
+
+    for g in (rmat_graph(args.scale, 8, seed=1),
+              grid_graph(40, spur_fraction=0.3, seed=2)):
+        print(f"\n=== {g.name}: n={g.n} m={g.m_undirected} "
+              f"max_deg={g.max_degree} SSD={g.sum_square_degrees}")
+        truth = triangle_count_scipy(g)
+        for label, fn in [
+            ("tc-intersection (forward algorithm)",
+             lambda: triangle_count_intersection(g)),
+            ("tc-matrix (masked block-SpGEMM)",
+             lambda: triangle_count_matrix(g, block=64)),
+            ("tc-SM (filter + join)", lambda: triangle_count_subgraph(g)),
+        ]:
+            t0 = time.perf_counter()
+            count = fn()
+            dt = time.perf_counter() - t0
+            flag = "OK " if count == truth else "BAD"
+            print(f"  [{flag}] {label:42s} {count:10d}  ({dt*1e3:7.1f} ms)")
+        tris = enumerate_triangles(g)
+        cc = clustering_coefficients(g)
+        print(f"  enumeration: {tris.shape[0]} triangles listed; "
+              f"mean clustering coeff {cc.mean():.4f}; "
+              f"transitivity {transitivity(g):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""One module per assigned architecture (+ the paper's own TC dataset config).
+
+Each exports CONFIG (the exact published configuration) and REDUCED (a
+same-family scale-down that one CPU core can forward/train-step in a smoke
+test)."""

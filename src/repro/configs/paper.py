@@ -1,0 +1,13 @@
+"""The paper's own experiment configuration: Table-1 dataset registry keys
+and per-figure benchmark settings (see benchmarks/run.py)."""
+
+DATASETS_FIG5 = [
+    "coauthors-like", "copapers-like", "road-like",
+    "soclj-like", "citpatents-like", "orkut-like",
+]
+
+METHODS = ["tc-intersection-filtered", "tc-intersection-full", "tc-matrix", "tc-SM"]
+
+# SSD-scaling sweep (Fig. 6): RMAT scales with fixed edge factor
+FIG6_SCALES = [8, 9, 10, 11, 12, 13]
+FIG6_EDGE_FACTOR = 8

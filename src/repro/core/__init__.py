@@ -1,0 +1,59 @@
+"""Core library: the paper's three exact triangle-counting formulations.
+
+Public API:
+    triangle_count_intersection  — forward algorithm, bucketed batch intersection
+    triangle_count_matrix        — masked block-SpGEMM (MXU tile schedule)
+    triangle_count_subgraph      — filter(2-core) + join subgraph matching
+    subgraph_match_triangle      — labeled triangle queries (SM generality)
+    enumerate_triangles / k_truss / clustering_coefficients / transitivity
+    triangle_count_*_distributed — shard_map multi-pod variants
+"""
+
+from repro.core.tc_intersection import (
+    triangle_count_intersection,
+    prepare_intersection_buckets,
+)
+from repro.core.tc_matrix import triangle_count_matrix, build_tile_schedule
+from repro.core.tc_subgraph import (
+    triangle_count_subgraph,
+    subgraph_match_triangle,
+    peel_to_two_core,
+)
+from repro.core.listing import (
+    enumerate_triangles,
+    triangles_per_vertex,
+    clustering_coefficients,
+    transitivity,
+    edge_support,
+    k_truss,
+)
+from repro.core.distributed import (
+    triangle_count_matrix_distributed,
+    triangle_count_intersection_distributed,
+)
+from repro.core.oracle import (
+    triangle_count_scipy,
+    triangle_count_brute,
+    triangle_count_forward_cpu,
+)
+
+__all__ = [
+    "triangle_count_intersection",
+    "prepare_intersection_buckets",
+    "triangle_count_matrix",
+    "build_tile_schedule",
+    "triangle_count_subgraph",
+    "subgraph_match_triangle",
+    "peel_to_two_core",
+    "enumerate_triangles",
+    "triangles_per_vertex",
+    "clustering_coefficients",
+    "transitivity",
+    "edge_support",
+    "k_truss",
+    "triangle_count_matrix_distributed",
+    "triangle_count_intersection_distributed",
+    "triangle_count_scipy",
+    "triangle_count_brute",
+    "triangle_count_forward_cpu",
+]

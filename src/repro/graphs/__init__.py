@@ -1,0 +1,40 @@
+from repro.graphs.formats import (
+    Graph,
+    BlockSparse,
+    edges_to_csr,
+    csr_to_padded_neighbors,
+    degree_order_permutation,
+    orient_forward,
+    to_block_sparse,
+    induced_subgraph,
+)
+from repro.graphs.generators import (
+    rmat_graph,
+    grid_graph,
+    erdos_renyi_graph,
+    watts_strogatz_graph,
+    complete_graph,
+    star_graph,
+    path_graph,
+)
+from repro.graphs.datasets import DATASETS, load_dataset
+
+__all__ = [
+    "Graph",
+    "BlockSparse",
+    "edges_to_csr",
+    "csr_to_padded_neighbors",
+    "degree_order_permutation",
+    "orient_forward",
+    "to_block_sparse",
+    "induced_subgraph",
+    "rmat_graph",
+    "grid_graph",
+    "erdos_renyi_graph",
+    "watts_strogatz_graph",
+    "complete_graph",
+    "star_graph",
+    "path_graph",
+    "DATASETS",
+    "load_dataset",
+]

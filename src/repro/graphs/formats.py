@@ -1,0 +1,307 @@
+"""Graph containers and format conversions.
+
+Host-side (numpy) graph preprocessing: CSR construction, degree-order
+permutation, forward-algorithm DAG orientation, padded neighbor matrices,
+degree-class bucketing, and 128x128 block-sparse (BSR) tiling.
+
+All heavy counting FLOPs happen in JAX (see repro.core); this module is the
+data pipeline that turns an edge list into the statically-shaped arrays those
+JAX computations require. This mirrors the paper's split: Gunrock's frontier
+plumbing (here: numpy preprocessing) vs. the compute kernels (here: Pallas).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Graph",
+    "BlockSparse",
+    "edges_to_csr",
+    "csr_to_padded_neighbors",
+    "degree_order_permutation",
+    "orient_forward",
+    "to_block_sparse",
+    "induced_subgraph",
+    "bucket_edges_by_degree",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Undirected simple graph in CSR form.
+
+    ``col_idx`` stores both directions of every undirected edge (the Table-1
+    convention in the paper), deduplicated, self-loop free, sorted per row.
+    """
+
+    n: int
+    row_ptr: np.ndarray  # (n+1,) int32
+    col_idx: np.ndarray  # (m,) int32, m = #directed edges
+    name: str = "graph"
+
+    @property
+    def m_directed(self) -> int:
+        return int(self.col_idx.shape[0])
+
+    @property
+    def m_undirected(self) -> int:
+        return int(self.col_idx.shape[0]) // 2
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.row_ptr).astype(np.int32)
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees.max(initial=0))
+
+    @property
+    def sum_square_degrees(self) -> int:
+        """Schank & Wagner's SSD = sum_v d(v)^2 — the Fig. 6 x-axis."""
+        d = self.degrees.astype(np.int64)
+        return int((d * d).sum())
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.col_idx[self.row_ptr[v] : self.row_ptr[v + 1]]
+
+    def edge_list_unique(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(src, dst) with src < dst — one row per undirected edge."""
+        src = np.repeat(np.arange(self.n, dtype=np.int32), self.degrees)
+        dst = self.col_idx
+        keep = src < dst
+        return src[keep], dst[keep]
+
+    def to_scipy(self):
+        import scipy.sparse as sp
+
+        data = np.ones_like(self.col_idx, dtype=np.int64)
+        return sp.csr_matrix(
+            (data, self.col_idx, self.row_ptr), shape=(self.n, self.n)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSparse:
+    """Block-sparse matrix with dense B×B tiles (BSR-like, tile list form).
+
+    ``blocks[t]`` is the dense content of tile t, located at block coordinates
+    ``(block_row[t], block_col[t])``. Tiles are sorted by (row, col).
+    """
+
+    n: int  # logical matrix dim (padded to multiple of block)
+    block: int  # tile edge length (128 = MXU native)
+    block_row: np.ndarray  # (T,) int32
+    block_col: np.ndarray  # (T,) int32
+    blocks: np.ndarray  # (T, block, block) float32/bool
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.block_row.shape[0])
+
+    @property
+    def grid(self) -> int:
+        return self.n // self.block
+
+    def block_index_map(self) -> dict:
+        """dict[(br, bc)] -> tile id."""
+        return {
+            (int(r), int(c)): i
+            for i, (r, c) in enumerate(zip(self.block_row, self.block_col))
+        }
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.n, self.n), dtype=self.blocks.dtype)
+        b = self.block
+        for i in range(self.num_blocks):
+            r, c = int(self.block_row[i]) * b, int(self.block_col[i]) * b
+            out[r : r + b, c : c + b] = self.blocks[i]
+        return out
+
+
+def edges_to_csr(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n: Optional[int] = None,
+    name: str = "graph",
+) -> Graph:
+    """Build a simple undirected CSR graph from a (possibly dirty) edge list.
+
+    Symmetrizes, removes self loops, deduplicates parallel edges, and sorts
+    each adjacency list by neighbor id (required by every intersection
+    routine downstream).
+    """
+    src = np.asarray(src, dtype=np.int64).ravel()
+    dst = np.asarray(dst, dtype=np.int64).ravel()
+    if n is None:
+        n = int(max(src.max(initial=-1), dst.max(initial=-1))) + 1
+    keep = src != dst  # drop self loops
+    src, dst = src[keep], dst[keep]
+    # symmetrize
+    u = np.concatenate([src, dst])
+    v = np.concatenate([dst, src])
+    # dedup via linear key
+    key = u * n + v
+    key = np.unique(key)
+    u = (key // n).astype(np.int32)
+    v = (key % n).astype(np.int32)
+    # already sorted by (u, v) because unique sorts keys
+    counts = np.bincount(u, minlength=n)
+    row_ptr = np.zeros(n + 1, dtype=np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    return Graph(n=int(n), row_ptr=row_ptr, col_idx=v, name=name)
+
+
+def degree_order_permutation(g: Graph) -> np.ndarray:
+    """perm[new_id] = old_id sorted by (degree, old_id) increasing.
+
+    The paper's tc-matrix step 1 ('permute rows so that it is ordered by an
+    increasing number of nonzeros'): shoves the heavy rows to the bottom-right
+    so L·U wedge counts stay cheap.
+    """
+    d = g.degrees
+    return np.lexsort((np.arange(g.n), d)).astype(np.int32)
+
+
+def apply_permutation(g: Graph, perm: np.ndarray) -> Graph:
+    """Relabel graph so that new vertex i corresponds to old vertex perm[i]."""
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(g.n, dtype=np.int32)
+    src = np.repeat(np.arange(g.n, dtype=np.int32), g.degrees)
+    dst = g.col_idx
+    return edges_to_csr(inv[src], inv[dst], n=g.n, name=g.name)
+
+
+def orient_forward(g: Graph) -> Graph:
+    """Forward-algorithm DAG orientation: keep u→v iff rank(u) < rank(v),
+    rank = (degree, id). Result is a directed CSR whose rows are the N⁺ lists
+    (sorted by vertex id) — this is the paper's 'filter out half the edges by
+    degree order' step, and guarantees Σ d⁺(v)² = O(m^1.5) work.
+    """
+    d = g.degrees
+    src = np.repeat(np.arange(g.n, dtype=np.int32), d)
+    dst = g.col_idx
+    du, dv = d[src], d[dst]
+    keep = (du < dv) | ((du == dv) & (src < dst))
+    src, dst = src[keep], dst[keep]
+    counts = np.bincount(src, minlength=g.n)
+    row_ptr = np.zeros(g.n + 1, dtype=np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    # rows remain sorted by dst because the original rows were sorted
+    return Graph(n=g.n, row_ptr=row_ptr, col_idx=dst.astype(np.int32), name=g.name + "+fwd")
+
+
+def csr_to_padded_neighbors(
+    g: Graph, pad_to: Optional[int] = None, fill: Optional[int] = None
+) -> np.ndarray:
+    """(n, pad_to) neighbor matrix padded with ``fill`` (default n — a vertex
+    id that never matches a real neighbor, so intersections ignore padding)."""
+    width = int(pad_to if pad_to is not None else max(1, g.max_degree))
+    fill_v = g.n if fill is None else fill
+    out = np.full((g.n, width), fill_v, dtype=np.int32)
+    d = g.degrees
+    if g.m_directed:
+        cols = np.arange(g.m_directed) - np.repeat(g.row_ptr[:-1], d)
+        rows = np.repeat(np.arange(g.n), d)
+        # rows wider than `width` are silently truncated: bucketed callers
+        # guarantee the rows they index fit, and truncated rows are unused
+        keep = cols < width
+        out[rows[keep], cols[keep]] = g.col_idx[keep]
+    return out
+
+
+def induced_subgraph(g: Graph, vertex_mask: np.ndarray) -> Tuple[Graph, np.ndarray]:
+    """Induced subgraph on ``vertex_mask`` (bool, len n). Returns (graph,
+    old_ids) where old_ids[new] = old. Mirrors the paper's 'reform the induced
+    subgraph with only the edges not filtered'."""
+    old_ids = np.nonzero(vertex_mask)[0].astype(np.int32)
+    remap = np.full(g.n, -1, dtype=np.int64)
+    remap[old_ids] = np.arange(old_ids.shape[0])
+    src = np.repeat(np.arange(g.n, dtype=np.int32), g.degrees)
+    dst = g.col_idx
+    keep = vertex_mask[src] & vertex_mask[dst]
+    sub = edges_to_csr(
+        remap[src[keep]], remap[dst[keep]], n=int(old_ids.shape[0]), name=g.name + "+sub"
+    )
+    return sub, old_ids
+
+
+def bucket_edges_by_degree(
+    src: np.ndarray,
+    dst: np.ndarray,
+    out_degree: np.ndarray,
+    widths: Sequence[int] = (8, 32, 128, 512),
+) -> list:
+    """The TPU analogue of the paper's TwoSmall/TwoLarge dynamic grouping.
+
+    Edges are grouped by the max out-degree of their endpoints into buckets of
+    static width; each bucket is later processed by one statically-shaped
+    intersection kernel launch. Returns a list of dicts
+    {width, src, dst} (numpy); edges wider than widths[-1] land in a final
+    bucket of width = next pow2 ≥ true max.
+    """
+    wu = out_degree[src]
+    wv = out_degree[dst]
+    w = np.maximum(wu, wv)
+    buckets = []
+    prev = 0
+    bounds = list(widths)
+    maxw = int(w.max(initial=0))
+    if maxw > bounds[-1]:
+        top = 1 << int(np.ceil(np.log2(max(maxw, 1))))
+        bounds.append(top)
+    for width in bounds:
+        sel = (w > prev) & (w <= width)
+        if sel.any():
+            buckets.append(
+                dict(width=int(width), src=src[sel].copy(), dst=dst[sel].copy())
+            )
+        prev = width
+    return buckets
+
+
+def to_block_sparse(
+    g: Graph,
+    block: int = 128,
+    part: str = "full",
+    dtype=np.float32,
+) -> BlockSparse:
+    """Tile the adjacency matrix into dense B×B blocks, keeping only nonzero
+    tiles. ``part`` ∈ {full, lower, upper} selects A, strict-L, or strict-U.
+
+    This is the HBM layout for the masked-SpGEMM TC kernel: scale-free graphs
+    permuted by increasing degree concentrate nonzeros into few tiles, so the
+    MXU runs dense 128³ products over a sparse tile schedule.
+    """
+    assert part in ("full", "lower", "upper")
+    src = np.repeat(np.arange(g.n, dtype=np.int64), g.degrees)
+    dst = g.col_idx.astype(np.int64)
+    if part == "lower":
+        keep = dst < src
+        src, dst = src[keep], dst[keep]
+    elif part == "upper":
+        keep = dst > src
+        src, dst = src[keep], dst[keep]
+    n_pad = ((g.n + block - 1) // block) * block
+    br, bc = src // block, dst // block
+    key = br * (n_pad // block) + bc
+    order = np.argsort(key, kind="stable")
+    src, dst, key = src[order], dst[order], key[order]
+    uniq, start = np.unique(key, return_index=True)
+    grid = n_pad // block
+    block_row = (uniq // grid).astype(np.int32)
+    block_col = (uniq % grid).astype(np.int32)
+    T = uniq.shape[0]
+    blocks = np.zeros((max(T, 1), block, block), dtype=dtype)
+    tile_of_edge = np.searchsorted(uniq, key)
+    blocks[tile_of_edge, src % block, dst % block] = 1
+    if T == 0:
+        blocks = np.zeros((0, block, block), dtype=dtype)
+        block_row = np.zeros((0,), dtype=np.int32)
+        block_col = np.zeros((0,), dtype=np.int32)
+    return BlockSparse(
+        n=int(n_pad), block=block, block_row=block_row, block_col=block_col, blocks=blocks
+    )

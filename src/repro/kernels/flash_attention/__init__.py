@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+__all__ = ["flash_attention", "flash_attention_ref", "flash_attention_pallas"]

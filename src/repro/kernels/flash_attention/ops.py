@@ -1,0 +1,32 @@
+"""Jitted dispatch for attention: pallas flash kernel / chunked-jnp / oracle."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, cap: Optional[float] = None,
+                    backend: str = "jnp", interpret: bool = True):
+    if backend == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      cap=cap, interpret=interpret)
+    if backend == "jnp":
+        from repro.models.layers import attention, NO_WINDOW
+
+        s, t = q.shape[1], k.shape[1]
+        return attention(q, k, v, q_pos=jnp.arange(s), k_pos=jnp.arange(t),
+                         causal=causal,
+                         window=NO_WINDOW if window is None else window,
+                         cap=cap)
+    if backend == "ref":
+        return flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   cap=cap)
+    raise ValueError(backend)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the flash-attention TPU kernel.
+
+Plain materialized attention (the O(S·T) logit plane) — numerically the
+ground truth the tiled kernel must match. Supports causal masking, local
+windows, and GQA via q-head grouping, mirroring repro.models.layers.attention
+semantics (which is itself a chunked-streaming evaluation of this oracle).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref"]
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # (B, S, Hq, hd)
+    k: jnp.ndarray,  # (B, T, Hkv, hd)
+    v: jnp.ndarray,  # (B, T, Hkv, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    cap: Optional[float] = None,
+) -> jnp.ndarray:
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bshgd,bthd->bshgt", qg, k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(hd)
+    if cap is not None:
+        logits = jnp.tanh(logits / cap) * cap
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(t)[None, :]
+    valid = jnp.ones((s, t), bool)
+    if causal:
+        valid &= qp >= kp
+    if window is not None:
+        valid &= (qp - kp) < window
+    logits = jnp.where(valid[None, :, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bshgt,bthd->bshgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, hd).astype(q.dtype)

@@ -1,0 +1,10 @@
+from repro.kernels.intersect.ops import intersect_counts, intersect_counts_probe
+from repro.kernels.intersect.ref import intersect_counts_ref
+from repro.kernels.intersect.intersect import intersect_counts_pallas
+
+__all__ = [
+    "intersect_counts",
+    "intersect_counts_probe",
+    "intersect_counts_ref",
+    "intersect_counts_pallas",
+]

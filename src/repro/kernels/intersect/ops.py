@@ -1,0 +1,68 @@
+"""Jitted wrappers around the batched intersection kernel.
+
+Three execution paths, selected by ``backend``:
+
+* ``"pallas"``   — the TPU kernel (interpret=True on CPU) in intersect.py.
+* ``"jnp"``      — O(E·W·log W) vmapped binary probe (searchsorted); the
+                   production CPU path and the GSPMD-shardable path.
+* ``"ref"``      — O(E·W²) broadcast-compare oracle (ref.py).
+
+The binary-probe path is also the TPU analogue of the paper's proposed third
+kernel (scan the smaller list, search the larger): callers order (u, v) so the
+probed list is the larger one.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.intersect.intersect import intersect_counts_pallas
+from repro.kernels.intersect.ref import intersect_counts_ref
+
+__all__ = ["intersect_counts", "intersect_counts_probe"]
+
+
+@jax.jit
+def intersect_counts_probe(u_lists: jnp.ndarray, v_lists: jnp.ndarray) -> jnp.ndarray:
+    """Binary-search each element of u in the sorted v list. O(W log W)."""
+
+    def one(u, v):
+        pos = jnp.searchsorted(v, u)
+        pos = jnp.clip(pos, 0, v.shape[0] - 1)
+        return (v[pos] == u).sum(dtype=jnp.int32)
+
+    return jax.vmap(one)(u_lists, v_lists)
+
+
+def intersect_counts(
+    u_lists: jnp.ndarray,
+    v_lists: jnp.ndarray,
+    *,
+    backend: str = "jnp",
+    tile_edges: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Dispatch per-edge intersection counts. Shapes (E, W) -> (E,) int32."""
+    if backend == "pallas":
+        e = u_lists.shape[0]
+        pad = (-e) % tile_edges
+        if pad:
+            # sentinel-pad rows: u rows all-(-1), v rows all-(-2) never match
+            u_lists = jnp.concatenate(
+                [u_lists, jnp.full((pad, u_lists.shape[1]), -1, u_lists.dtype)]
+            )
+            v_lists = jnp.concatenate(
+                [v_lists, jnp.full((pad, v_lists.shape[1]), -2, v_lists.dtype)]
+            )
+        out = intersect_counts_pallas(
+            u_lists, v_lists, tile_edges=tile_edges, interpret=interpret
+        )
+        return out[:e] if pad else out
+    if backend == "jnp":
+        return intersect_counts_probe(u_lists, v_lists)
+    if backend == "ref":
+        return intersect_counts_ref(u_lists, v_lists)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for batched sorted-neighbor-list intersection.
+
+Given two padded neighbor-list batches ``u_lists`` and ``v_lists`` of shape
+(E, W) — row e holding the sorted out-neighbor list of edge e's endpoints,
+padded with a sentinel that appears in neither list — returns the per-edge
+intersection sizes (E,) int32.
+
+This is the semantic the paper's TwoSmall/TwoLarge GPU kernels compute; the
+oracle is O(E·W²) broadcast-compare, trivially correct.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["intersect_counts_ref"]
+
+
+def intersect_counts_ref(u_lists: jnp.ndarray, v_lists: jnp.ndarray) -> jnp.ndarray:
+    """O(W^2) membership test. Padding must use sentinels that never collide
+    (callers use n for u-padding and n+1 for v-padding)."""
+    eq = u_lists[:, :, None] == v_lists[:, None, :]
+    return eq.sum(axis=(1, 2)).astype(jnp.int32)

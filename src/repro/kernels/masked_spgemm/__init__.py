@@ -1,0 +1,5 @@
+from repro.kernels.masked_spgemm.ops import masked_spgemm_counts
+from repro.kernels.masked_spgemm.ref import masked_spgemm_ref
+from repro.kernels.masked_spgemm.masked_spgemm import masked_spgemm_pallas
+
+__all__ = ["masked_spgemm_counts", "masked_spgemm_ref", "masked_spgemm_pallas"]

@@ -1,0 +1,70 @@
+"""Jitted wrapper for the masked block-SpGEMM triangle kernel.
+
+``backend`` ∈ {"pallas", "jnp", "ref"}:
+  pallas — the MXU tile kernel (interpret=True on CPU),
+  jnp    — chunked einsum path (memory-bounded via lax.map), production CPU
+           path and the path GSPMD shards in distributed TC,
+  ref    — the one-shot einsum oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_spgemm.masked_spgemm import masked_spgemm_pallas
+from repro.kernels.masked_spgemm.ref import masked_spgemm_ref
+
+__all__ = ["masked_spgemm_counts"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _masked_spgemm_chunked(l_tiles, u_tiles, a_tiles, *, chunk: int = 64):
+    t = l_tiles.shape[0]
+    pad = (-t) % chunk
+    if pad:
+        z = jnp.zeros((pad,) + l_tiles.shape[1:], l_tiles.dtype)
+        l_tiles = jnp.concatenate([l_tiles, z])
+        u_tiles = jnp.concatenate([u_tiles, z])
+        a_tiles = jnp.concatenate([a_tiles, z])
+    lt = l_tiles.reshape(-1, chunk, *l_tiles.shape[1:])
+    ut = u_tiles.reshape(-1, chunk, *u_tiles.shape[1:])
+    at = a_tiles.reshape(-1, chunk, *a_tiles.shape[1:])
+
+    def body(args):
+        l, u, a = args
+        prod = jnp.einsum("tik,tkj->tij", l, u, preferred_element_type=jnp.float32)
+        return (prod * a).sum(axis=(1, 2))
+
+    out = jax.lax.map(body, (lt, ut, at)).reshape(-1)
+    return out[:t] if pad else out
+
+
+def masked_spgemm_counts(
+    l_tiles: jnp.ndarray,
+    u_tiles: jnp.ndarray,
+    a_tiles: jnp.ndarray,
+    *,
+    backend: str = "jnp",
+    tile_triples: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    if backend == "pallas":
+        t = l_tiles.shape[0]
+        pad = (-t) % tile_triples
+        if pad:
+            z = jnp.zeros((pad,) + l_tiles.shape[1:], l_tiles.dtype)
+            l_tiles = jnp.concatenate([l_tiles, z])
+            u_tiles = jnp.concatenate([u_tiles, z])
+            a_tiles = jnp.concatenate([a_tiles, z])
+        out = masked_spgemm_pallas(
+            l_tiles, u_tiles, a_tiles, tile_triples=tile_triples, interpret=interpret
+        )
+        return out[:t] if pad else out
+    if backend == "jnp":
+        return _masked_spgemm_chunked(l_tiles, u_tiles, a_tiles)
+    if backend == "ref":
+        return masked_spgemm_ref(l_tiles, u_tiles, a_tiles)
+    raise ValueError(f"unknown backend {backend!r}")

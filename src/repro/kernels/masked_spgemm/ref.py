@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused masked block-SpGEMM triangle kernel.
+
+Inputs are stacked 128×128 (or any B×B) dense tiles gathered by the host
+scheduler (core/tc_matrix.py):
+
+  l_tiles (T, B, B)  — L tile at (I, K) for triple t
+  u_tiles (T, B, B)  — U tile at (K, J) for triple t
+  a_tiles (T, B, B)  — mask tile A at (I, J) for triple t
+
+Output: per-triple masked partial wedge counts  sum(A_IJ ∘ (L_IK @ U_KJ)),
+shape (T,) float32. Total triangles = sum(out) when A covers the strict upper
+triangle (each triangle counted exactly once at its min-vertex wedge).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["masked_spgemm_ref"]
+
+
+def masked_spgemm_ref(
+    l_tiles: jnp.ndarray, u_tiles: jnp.ndarray, a_tiles: jnp.ndarray
+) -> jnp.ndarray:
+    prod = jnp.einsum(
+        "tik,tkj->tij", l_tiles, u_tiles, preferred_element_type=jnp.float32
+    )
+    return (prod * a_tiles).sum(axis=(1, 2)).astype(jnp.float32)

@@ -1,0 +1,72 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from dryrun.jsonl.
+
+    PYTHONPATH=src python -m repro.launch.report dryrun.jsonl
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from collections import OrderedDict
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "—"
+    return f"{b/1e9:.2f}"
+
+
+def load(path: str):
+    recs = OrderedDict()
+    for line in open(path):
+        r = json.loads(line)
+        recs[(r["arch"], r.get("shape"), r["mesh"])] = r  # last write wins
+    return list(recs.values())
+
+
+def roofline_table(recs, mesh="16x16"):
+    rows = []
+    header = ("| arch | shape | status | t_compute (s) | t_memory (s) | "
+              "t_collective (s) | dominant | MODEL/HLO flops | temp GB/chip |")
+    sep = "|" + "---|" * 9
+    rows.append(header)
+    rows.append(sep)
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | skip | — | — | — | — "
+                        f"| — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {rl['t_compute']:.3f} | {rl['t_memory']:.3f} "
+            f"| {rl['t_collective']:.3f} | {rl['dominant']} "
+            f"| {rl['useful_ratio']:.2f} "
+            f"| {_fmt_bytes(mem.get('temp_size_in_bytes'))} |")
+    return "\n".join(rows)
+
+
+def summary(recs):
+    ok = sum(r["status"] == "ok" for r in recs)
+    skip = sum(r["status"] == "skipped" for r in recs)
+    err = sum(r["status"] not in ("ok", "skipped") for r in recs)
+    return f"{ok} ok / {skip} documented skips / {err} errors"
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun.jsonl"
+    recs = load(path)
+    print("## Dry-run summary:", summary(recs))
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### Mesh {mesh}\n")
+        print(roofline_table(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

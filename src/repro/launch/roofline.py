@@ -1,0 +1,140 @@
+"""Roofline-term extraction from compiled (AOT) artifacts.
+
+Per (arch, shape, mesh) the dry-run produces a lowered+compiled executable;
+this module derives the three roofline terms against TPU v5e constants:
+
+  compute    = HLO_FLOPs_per_chip    / PEAK_FLOPS        (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_chip    / HBM_BW            (819 GB/s)
+  collective = collective_bytes_per_chip / ICI_BW        (50 GB/s/link)
+
+``compiled.cost_analysis()`` reports the per-device (post-SPMD-partitioning)
+module, so its flops/bytes are already per-chip. Collective bytes are NOT in
+cost_analysis: we parse the optimized HLO and sum, per collective op, the
+bytes that cross the wire per chip with ring-algorithm factors:
+
+  all-reduce        2·(N−1)/N · size   (reduce-scatter + all-gather phases)
+  all-gather        (N−1)/N · output
+  reduce-scatter    (N−1)/N · input
+  all-to-all        (N−1)/N · size
+  collective-permute  1 · size
+
+N (participants) is parsed from replica_groups when present; N→large makes
+the factor ≈1, so unparsed groups default to factor 1 (2 for all-reduce).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "RooflineResult"]
+
+# TPU v5e (per chip)
+HW = dict(
+    peak_flops=197e12,  # bf16
+    hbm_bw=819e9,  # bytes/s
+    ici_bw=50e9,  # bytes/s/link
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _participants(line: str) -> Optional[int]:
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # iota format [num_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return None
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-chip wire bytes by collective kind, parsed from optimized HLO."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        n = _participants(line)
+        frac = (n - 1) / n if n and n > 1 else 1.0
+        if n is not None and n <= 1:
+            continue  # degenerate single-participant op moves nothing
+        factor = {"all-reduce": 2.0 * frac,
+                  "all-gather": frac,
+                  "reduce-scatter": frac,
+                  "all-to-all": frac,
+                  "collective-permute": 1.0}[kind]
+        out[kind] = out.get(kind, 0.0) + size * factor
+    return out
+
+
+@dataclasses.dataclass
+class RooflineResult:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, float]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(cost: dict, hlo_text: str, *, model_flops_per_chip: float
+                   ) -> RooflineResult:
+    """Loop-aware terms via launch.hlo_cost (xla cost_analysis counts while
+    bodies once — unusable for scan-stacked models; we keep its numbers only
+    as a cross-check in the record)."""
+    from repro.launch.hlo_cost import analyze_hlo
+
+    hc = analyze_hlo(hlo_text)
+    flops = hc.flops or float(cost.get("flops", 0.0))
+    hbm = hc.bytes or float(cost.get("bytes accessed", 0.0))
+    coll = {k: float(v) for k, v in hc.coll_by_kind.items()}
+    coll_total = sum(coll.values())
+    t_c = flops / HW["peak_flops"]
+    t_m = hbm / HW["hbm_bw"]
+    t_n = coll_total / HW["ici_bw"]
+    dominant = max((("compute", t_c), ("memory", t_m), ("collective", t_n)),
+                   key=lambda kv: kv[1])[0]
+    return RooflineResult(
+        flops=flops, hbm_bytes=hbm, coll_bytes=coll_total, coll_by_kind=coll,
+        t_compute=t_c, t_memory=t_m, t_collective=t_n, dominant=dominant,
+        model_flops=model_flops_per_chip,
+        useful_ratio=(model_flops_per_chip / flops) if flops else 0.0,
+    )

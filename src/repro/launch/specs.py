@@ -1,0 +1,95 @@
+"""ShapeDtypeStruct stand-ins for every (architecture × input shape) cell.
+
+``input_specs(arch, shape)`` returns the abstract inputs the dry-run lowers
+against — weak-type-correct, shardable, zero allocation. The assigned shape
+set (LM transformers):
+
+  train_4k     seq 4096,   global_batch 256   → train_step
+  prefill_32k  seq 32768,  global_batch 32    → prefill
+  decode_32k   cache 32768, global_batch 128  → decode_step (1 new token)
+  long_500k    cache 524288, global_batch 1   → decode_step, sub-quadratic
+                archs only (ssm / hybrid); others report a documented skip.
+
+Modality stubs per the brief: whisper gets precomputed frame embeddings,
+paligemma gets precomputed patch embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.registry import get_config, get_model
+
+__all__ = ["SHAPES", "CellSpec", "cell_spec", "input_specs", "skip_reason"]
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+def cell_spec(arch: str, shape: str) -> CellSpec:
+    return CellSpec(arch=arch, shape=shape, **SHAPES[shape])
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> Optional[str]:
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return ("quadratic global attention at 524288 ctx — skipped per "
+                "brief (run for SSM/hybrid only)")
+    return None
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, S]:
+    """Abstract batch for the step function the cell lowers."""
+    cfg = get_config(arch)
+    cell = cell_spec(arch, shape)
+    b, sl = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        batch = {
+            "tokens": S((b, sl), jnp.int32),
+            "labels": S((b, sl), jnp.int32),
+        }
+        if cfg.family == "encdec":
+            batch["frames"] = S((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            batch["patches"] = S((b, cfg.vision_tokens, cfg.vision_dim),
+                                 jnp.float32)
+        return batch
+    if cell.kind == "prefill":
+        batch = {"tokens": S((b, sl), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = S((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            batch["patches"] = S((b, cfg.vision_tokens, cfg.vision_dim),
+                                 jnp.float32)
+        return batch
+    # decode: one new token + abstract cache
+    model = get_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(b, sl, jnp.bfloat16))
+    return {"tokens": S((b, 1), jnp.int32), "cache": cache}
+
+
+def abstract_params(arch: str, dtype=jnp.bfloat16):
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init(jax.random.key(0), dtype=dtype))

@@ -1,0 +1,334 @@
+"""Neural-net layer primitives shared by all 10 architecture families.
+
+Pure-JAX (no framework dependency): parameters are nested dicts of arrays;
+every layer is an ``init_*``/``apply`` function pair. Models keep no mesh
+references — distribution is injected externally through in_shardings on the
+jitted step functions (GSPMD propagates from parameter shardings).
+
+Attention is computed with a chunked-KV online-softmax scan (never
+materializes the full S×T logit matrix), which is both the memory-sane path
+for 32k prefill and the structure a TPU flash kernel tiles; the Pallas
+flash_attention kernel in repro.kernels is the drop-in MXU version of the
+same math and is validated against ``attention_ref``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.meshctx import constrain
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "rmsnorm_init",
+    "rmsnorm",
+    "rope",
+    "attention",
+    "decode_attention",
+    "init_attention_block",
+    "init_mlp",
+    "mlp",
+    "init_moe",
+    "moe",
+    "softcap",
+]
+
+
+def _he(key, shape, dtype, fan_in=None):
+    fan = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.bfloat16):
+    p = {"w": _he(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def quantize_kv(x):
+    """Symmetric int8 over the head_dim axis. x: (..., hd) →
+    (int8 (..., hd), scale (...,) f32·bf16-safe)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                        1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32)
+            * scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
+def mask_padded_vocab(logits, vocab: int):
+    """Kill padded-vocab logits (embed tables are padded so the vocab dim
+    shards evenly; see ModelConfig.padded_vocab)."""
+    if logits.shape[-1] == vocab:
+        return logits
+    ids = jax.lax.broadcasted_iota(jnp.int32, (logits.shape[-1],), 0)
+    return jnp.where(ids < vocab, logits, -1e30)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10_000.0):
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    ang = ang[..., :, None, :]  # broadcast over heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+#
+# ``window`` is a TRACED int32 scalar everywhere (use NO_WINDOW = 2**30 for
+# global attention) so heterogeneous local/global layer stacks scan over a
+# per-layer window vector with homogeneous code. Padded key slots use
+# k_pos = -1, which every mask rejects via k_pos >= 0.
+
+NO_WINDOW = 1 << 30
+
+
+def _mask(q_pos, k_pos, window, causal: bool, prefix_len: int):
+    """(S, C) boolean validity mask from absolute positions."""
+    qk = q_pos[:, None] - k_pos[None, :]
+    if causal:
+        valid = (qk >= 0) & (qk < window)
+    else:
+        valid = jnp.abs(qk) < window
+    if prefix_len:
+        valid = valid | (k_pos[None, :] < prefix_len)
+    return valid & (k_pos[None, :] >= 0)
+
+
+def attention(
+    q: jnp.ndarray,  # (B, S, Hq, hd)
+    k: jnp.ndarray,  # (B, T, Hkv, hd)
+    v: jnp.ndarray,  # (B, T, Hkv, hd)
+    *,
+    q_pos: jnp.ndarray,  # (S,)
+    k_pos: jnp.ndarray,  # (T,)
+    window=NO_WINDOW,  # traced int32 scalar
+    causal: bool = True,
+    prefix_len: int = 0,
+    cap: Optional[float] = None,
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    """Chunked-KV online-softmax attention (GQA-aware). Returns (B,S,Hq,hd).
+
+    Never materializes the S×T logit matrix: the KV axis is scanned in
+    ``chunk``-sized tiles with a running (max, sumexp, out) accumulator —
+    the jnp expression of the flash-attention schedule, and the oracle for
+    kernels/flash_attention.
+    """
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    v = constrain(v, "batch", None, "model", None)
+    qg = q.reshape(b, s, hkv, g, hd).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(hd)
+    window = jnp.asarray(window, jnp.int32)
+
+    chunk = min(chunk, t)
+    nchunks = -(-t // chunk)
+    pad = nchunks * chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+    kc = k.reshape(b, nchunks, chunk, hkv, hd)
+    vc = v.reshape(b, nchunks, chunk, hkv, hd)
+    pc = k_pos.reshape(nchunks, chunk)
+
+    def step(carry, xs):
+        m_run, l_run, o_run = carry  # (B,S,Hkv,G), same, (B,S,Hkv,G,hd)
+        kci, vci, pci = xs
+        logits = jnp.einsum("bshgd,bchd->bshgc", qg, kci.astype(jnp.float32))
+        logits = logits * scale
+        if cap is not None:
+            logits = softcap(logits, cap)
+        valid = _mask(q_pos, pci, window, causal, prefix_len)  # (S, C)
+        logits = jnp.where(valid[None, :, None, None, :], logits, -1e30)
+        m_new = jnp.maximum(m_run, logits.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l_run * alpha + p.sum(axis=-1)
+        o_new = o_run * alpha[..., None] + jnp.einsum(
+            "bshgc,bchd->bshgd", p, vci.astype(jnp.float32)
+        )
+        return (m_new, l_new, o_new), None
+
+    init = (
+        jnp.full((b, s, hkv, g), -1e30, jnp.float32),
+        jnp.zeros((b, s, hkv, g), jnp.float32),
+        jnp.zeros((b, s, hkv, g, hd), jnp.float32),
+    )
+    (m_f, l_f, o_f), _ = jax.lax.scan(
+        step, init, (kc.swapaxes(0, 1), vc.swapaxes(0, 1), pc)
+    )
+    out = o_f / jnp.maximum(l_f[..., None], 1e-30)
+    return out.reshape(b, s, hq, hd).astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, Hq, hd)
+    k_cache: jnp.ndarray,  # (B, T, Hkv, hd)
+    v_cache: jnp.ndarray,
+    *,
+    cur_pos: jnp.ndarray,  # scalar: index of the new token
+    window=NO_WINDOW,
+    cap: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-step attention against the KV cache."""
+    b, _, hq, hd = q.shape
+    t, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    window = jnp.asarray(window, jnp.int32)
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache.astype(jnp.float32))
+    logits = logits / jnp.sqrt(hd)
+    if cap is not None:
+        logits = softcap(logits, cap)
+    pos = jnp.arange(t)
+    valid = (pos <= cur_pos) & (pos > cur_pos - window)
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+def init_attention_block(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    hd = cfg.head_dim
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.num_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, cfg.d_model, dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------- MLP / MoE
+
+
+def init_mlp(key, d: int, ff: int, *, gated: bool = True, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], d, ff, dtype=dtype),
+         "wo": dense_init(ks[1], ff, d, dtype=dtype)}
+    if gated:
+        p["wg"] = dense_init(ks[2], d, ff, dtype=dtype)
+    return p
+
+
+def mlp(p, x, act: str = "silu"):
+    h = dense(p["wi"], x)
+    if "wg" in p:
+        gate = dense(p["wg"], x)
+        h = (jax.nn.silu(gate.astype(jnp.float32)) * h.astype(jnp.float32)).astype(x.dtype)
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return dense(p["wo"], h)
+
+
+def init_moe(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+    e, d, ff = cfg.num_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": _he(ks[0], (d, e), jnp.float32),
+        "wi": _he(ks[1], (e, d, ff), dtype),
+        "wg": _he(ks[2], (e, d, ff), dtype),
+        "wo": _he(ks[3], (e, ff, d), dtype, fan_in=ff),
+    }
+    if cfg.dense_residual:
+        p["dense"] = init_mlp(ks[4], d, cfg.dense_residual_ff, dtype=dtype)
+    return p
+
+
+def moe(p, x, cfg):
+    """Grouped capacity-based top-k MoE (Mesh-TF/Switch dispatch). x: (B,S,d).
+
+    Dispatch is GROUPED per sequence: capacity is enforced within each batch
+    row, so the dispatch one-hot is (B, S, E, C_g) with C_g = S·k/E·cf — its
+    size scales with the *local* sequence, not the global batch. (An
+    ungrouped dispatch materialized a (N_global, E, C_global) tensor: 43 GB
+    per chip for arctic train_4k — see EXPERIMENTS.md §Perf iteration 0.)
+    The batch/group dim is data-sharded and experts are EP-sharded over
+    "model", so dispatch/combine einsums lower to all-to-alls under GSPMD.
+    Returns (out, aux_loss).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = max(1, int(s * k / e * cfg.moe_capacity_factor))
+    logits = x.astype(jnp.float32) @ p["router"]  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert queue, per group
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # (B, S, k, E)
+    flat = onehot.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat  # rank among same-expert slots
+    pos = (pos * flat).sum(-1).reshape(b, s, k)  # (B, S, k)
+    keep = pos < cap
+    # dispatch/combine (B, S, E, C): contract the k slots without ever
+    # materializing the (B,S,k,E,C) outer product
+    oh_e = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # (B, S, k, E)
+    oh_c = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                          dtype=jnp.float32)[..., :cap]  # (B, S, k, C)
+    disp = jnp.einsum("bske,bskc->bsec", oh_e, oh_c).astype(x.dtype)
+    comb = jnp.einsum("bske,bskc,bsk->bsec", oh_e, oh_c,
+                      gate_vals).astype(x.dtype)
+
+    # dispatch/combine in activation dtype: the combine contraction over the
+    # EP-sharded expert dim is the layer's model-axis all-reduce — bf16 here
+    # halves arctic's dominant collective term (EXPERIMENTS.md §Perf iter 2)
+    ex_in = jnp.einsum("bsec,bsd->becd", disp, x)
+    ex_in = constrain(ex_in, "batch", "model", None, None)
+    h = jnp.einsum("becd,edf->becf", ex_in, p["wi"])
+    gth = jnp.einsum("becd,edf->becf", ex_in, p["wg"])
+    h = (jax.nn.silu(gth.astype(jnp.float32)) * h.astype(jnp.float32)
+         ).astype(x.dtype)
+    ex_out = jnp.einsum("becf,efd->becd", h, p["wo"])
+    out = jnp.einsum("bsec,becd->bsd", comb, ex_out)
+    if "dense" in p:
+        out = out + mlp(p["dense"], x)
+    # load-balance aux loss (Switch): e * sum_e f_e * P_e
+    density = flat.astype(jnp.float32).mean(axis=(0, 1))
+    router_prob = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(density * router_prob)
+    return out, aux

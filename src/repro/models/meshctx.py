@@ -1,0 +1,58 @@
+"""Context-scoped activation sharding constraints.
+
+Models are mesh-free, but GSPMD propagation alone can pick pathological
+layouts: with FSDP-sharded weights the (d_model over data) parameter sharding
+propagates into activations and REPLICATES the batch — observed as 16×
+redundant attention compute and 15 GB softmax buffers on arctic-480b
+(EXPERIMENTS.md §Perf iteration 0). MaxText solves this with explicit
+activation constraints; we do the same behind a context so tests/benches
+(no mesh) are unaffected.
+
+Axis aliases: "batch" → all data-carrying mesh axes (("pod","data") on the
+multi-pod mesh), "model" → "model". Constraints are divisibility-sanitized,
+so batch=1 decode cells silently replicate.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["activation_mesh", "constrain"]
+
+_ACTIVE: Optional[Mesh] = None
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Optional[Mesh]):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = mesh
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def _resolve(axis, mesh: Mesh):
+    if axis == "batch":
+        ax = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        return ax if ax else None
+    if axis == "model":
+        return "model" if "model" in mesh.axis_names else None
+    return axis
+
+
+def constrain(x, *spec):
+    """No-op without an active mesh. spec entries: "batch", "model", None."""
+    if _ACTIVE is None:
+        return x
+    from repro.train.sharding import sanitize_spec
+
+    entries = tuple(_resolve(a, _ACTIVE) for a in spec)
+    entries = entries + (None,) * (x.ndim - len(entries))
+    s = sanitize_spec(P(*entries), x.shape, _ACTIVE)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_ACTIVE, s))

@@ -1,0 +1,59 @@
+"""Architecture registry: ``--arch <id>`` resolution for configs and models."""
+
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.models.config import ModelConfig
+
+__all__ = ["get_config", "get_reduced_config", "get_model", "list_archs", "ARCHS"]
+
+ARCHS = [
+    "gemma2-2b",
+    "qwen1.5-4b",
+    "qwen1.5-32b",
+    "minicpm-2b",
+    "mamba2-780m",
+    "arctic-480b",
+    "dbrx-132b",
+    "whisper-medium",
+    "paligemma-3b",
+    "recurrentgemma-9b",
+]
+
+
+def _module(arch: str):
+    return importlib.import_module(f"repro.configs.{arch.replace('-', '_').replace('.', '_')}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_reduced_config(arch: str) -> ModelConfig:
+    return _module(arch).REDUCED
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import TransformerLM
+
+        return TransformerLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.ssm import MambaLM
+
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.rglru import GriffinLM
+
+        return GriffinLM(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import WhisperModel
+
+        return WhisperModel(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

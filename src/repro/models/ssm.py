@@ -1,0 +1,265 @@
+"""Mamba-2 (SSD — state-space duality) language model [arXiv:2405.21060].
+
+Chunked SSD forward: within chunks of length Q the dual quadratic form runs
+(MXU-friendly batched matmuls); across chunks a sequential `lax.scan` passes
+the (H, P, N) state. Decode is the pure SSM recurrence — O(1) per token, which
+is what makes the ``long_500k`` cell runnable where attention archs are
+skipped.
+
+Structure per block (simplified from the reference: ngroups=1, no bias):
+  u → in_proj → [z, x, B, C, dt]
+  conv1d(width 4) + silu over [x, B, C]
+  y = SSD(x·dt, exp(dt·A), B, C) + D·x
+  out = out_proj(rmsnorm(y · silu(z)))
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models.meshctx import constrain
+
+__all__ = ["MambaLM", "ssd_chunked", "ssd_decode_step"]
+
+
+def _segsum(a):
+    """a: (..., Q) log-decays → (..., Q, Q) lower-tri cumulative sums:
+    out[i, j] = sum_{j < t <= i} a[t]  (i >= j), -inf above diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii, jj = jnp.meshgrid(jnp.arange(q), jnp.arange(q), indexing="ij")
+    return jnp.where(ii >= jj, diff, -jnp.inf)
+
+
+def ssd_chunked(x, a, Bm, Cm, chunk: int):
+    """SSD scan. x: (b,s,h,p) pre-multiplied by dt; a: (b,s,h) log decay;
+    Bm, Cm: (b,s,n). Returns y: (b,s,h,p), final_state: (b,h,p,n)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:  # zero-pad tail: a=0, x=0 ⇒ pads never influence real outputs
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    s_pad = s + pad
+    c = s_pad // q
+    xr = x.reshape(b, c, q, h, p)
+    ar = a.reshape(b, c, q, h)
+    Br = Bm.reshape(b, c, q, n)
+    Cr = Cm.reshape(b, c, q, n)
+
+    a_cs = jnp.cumsum(ar, axis=2)  # (b,c,q,h)
+    # intra-chunk (dual quadratic form)
+    Lmat = jnp.exp(_segsum(ar.transpose(0, 1, 3, 2)))  # (b,c,h,q,q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cr, Br)  # (b,c,q,q)
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", scores, Lmat, xr)
+    # per-chunk end states
+    decay_states = jnp.exp(a_cs[:, :, -1:, :] - a_cs)  # (b,c,q,h)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Br, decay_states, xr)
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :])  # (b,c,h)
+
+    def step(hprev, xs):
+        st, dec = xs  # (b,h,p,n), (b,h)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), x.dtype)
+    hT, h_prevs = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    h_prevs = h_prevs.swapaxes(0, 1)  # (b,c,h,p,n): state entering chunk c
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cr, h_prevs, jnp.exp(a_cs))
+    y = (y_diag + y_off).reshape(b, s_pad, h, p)[:, :s]
+    return y, hT
+
+
+def ssd_decode_step(state, x_t, a_t, B_t, C_t):
+    """One recurrence step. state: (b,h,p,n); x_t: (b,h,p) (pre-×dt);
+    a_t: (b,h) log decay; B_t, C_t: (b,n)."""
+    dec = jnp.exp(a_t)[..., None, None]
+    state = state * dec + jnp.einsum("bhp,bn->bhpn", x_t, B_t)
+    y = jnp.einsum("bhpn,bn->bhp", state, C_t)
+    return state, y
+
+
+def _causal_conv(x, w, cache=None):
+    """Per-channel causal conv. x: (b,s,ch); w: (width, ch).
+    With cache (b, width-1, ch): single-step path (s==1)."""
+    width = w.shape[0]
+    if cache is not None:
+        window = jnp.concatenate([cache, x], axis=1)  # (b, width, ch)
+        y = (window * w[None]).sum(axis=1, keepdims=True)
+        return y, window[:, 1:]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    y = sum(pad[:, i : i + x.shape[1]] * w[i][None, None] for i in range(width))
+    return y, pad[:, -(width - 1) :] if width > 1 else None
+
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        d = cfg.d_model
+        self.d_in = cfg.expand * d
+        self.h = cfg.ssm_heads or (self.d_in // (cfg.ssm_head_dim or 64))
+        self.p = self.d_in // self.h
+        self.n = cfg.ssm_state
+        self.conv_dim = self.d_in + 2 * self.n
+
+    def _init_layer(self, key, dtype):
+        cfg, d = self.cfg, self.cfg.d_model
+        ks = jax.random.split(key, 4)
+        return {
+            "ln": L.rmsnorm_init(d, dtype),
+            "in_proj": L.dense_init(
+                ks[0], d, 2 * self.d_in + 2 * self.n + self.h, dtype=dtype),
+            "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, self.conv_dim))
+                       * 0.1).astype(dtype),
+            "A_log": jnp.zeros((self.h,), jnp.float32),
+            "D": jnp.ones((self.h,), jnp.float32),
+            "dt_bias": jnp.zeros((self.h,), jnp.float32),
+            "gate_ln": L.rmsnorm_init(self.d_in, dtype),
+            "out_proj": L.dense_init(ks[2], self.d_in, d, dtype=dtype),
+        }
+
+    def init(self, key, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        k_emb, k_layers = jax.random.split(key)
+        stacked = jax.vmap(lambda k: self._init_layer(k, dtype))(
+            jax.random.split(k_layers, cfg.num_layers))
+        return {
+            "embed": (jax.random.normal(
+                k_emb, (cfg.padded_vocab, cfg.d_model)) * 0.02).astype(dtype),
+            "layers": stacked,
+            "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+        }
+
+    def _split_proj(self, zxbcdt):
+        di, n, h = self.d_in, self.n, self.h
+        z = zxbcdt[..., :di]
+        xbc = zxbcdt[..., di : di + di + 2 * n]
+        dt = zxbcdt[..., di + di + 2 * n :]
+        return z, xbc, dt
+
+    def _layer_fwd(self, p, x, *, cache=None):
+        """cache: (ssm_state (b,h,p,n), conv_state (b,w-1,conv_dim)) or None."""
+        cfg = self.cfg
+        b, s, d = x.shape
+        x = constrain(x, "batch", None, None)
+        h_in = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+        z, xbc, dt = self._split_proj(L.dense(p["in_proj"], h_in))
+        new_cache = None
+        if cache is None:
+            xbc, _ = _causal_conv(xbc, p["conv_w"])
+        else:
+            ssm_state, conv_state = cache
+            xbc, conv_state = _causal_conv(xbc, p["conv_w"], conv_state)
+        xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+        xc = xbc[..., : self.d_in].reshape(b, s, self.h, self.p)
+        Bm = xbc[..., self.d_in : self.d_in + self.n]
+        Cm = xbc[..., self.d_in + self.n :]
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,s,h)
+        A = -jnp.exp(p["A_log"])  # (h,)
+        xdt = (xc.astype(jnp.float32) * dt[..., None])
+        a = dt * A  # (b,s,h) log decay
+        if cache is None:
+            y, _ = ssd_chunked(xdt, a, Bm.astype(jnp.float32),
+                               Cm.astype(jnp.float32), cfg.ssm_chunk)
+        else:
+            ssm_state, y = ssd_decode_step(
+                ssm_state, xdt[:, 0], a[:, 0], Bm[:, 0].astype(jnp.float32),
+                Cm[:, 0].astype(jnp.float32))
+            y = y[:, None]
+            new_cache = (ssm_state, conv_state)
+        y = y + xc.astype(jnp.float32) * p["D"][None, None, :, None]
+        y = y.reshape(b, s, self.d_in)
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        y = L.rmsnorm(p["gate_ln"], y.astype(x.dtype), cfg.norm_eps)
+        out = L.dense(p["out_proj"], y)
+        return x + out, new_cache
+
+    def apply_train(self, params, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+
+        def body(x, p):
+            x, _ = self._layer_fwd(p, x)
+            return x, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["layers"])
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.mask_padded_vocab(
+            x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32),
+            cfg.vocab)
+        return logits, jnp.float32(0)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        lcount = cfg.num_layers
+        return {
+            "ssm": jnp.zeros((lcount, batch, self.h, self.p, self.n), jnp.float32),
+            "conv": jnp.zeros((lcount, batch, cfg.conv_width - 1, self.conv_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+
+        def body(x, xs):
+            p, st, cv = xs
+            x, (nst, ncv) = self._layer_fwd(p, x, cache=(st, cv))
+            return x, (nst, ncv.astype(cv.dtype))
+
+        x, (nst, ncv) = jax.lax.scan(
+            body, x, (params["layers"], cache["ssm"], cache["conv"]))
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.mask_padded_vocab(
+            x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32),
+            cfg.vocab)
+        return logits, {"ssm": nst, "conv": ncv, "pos": cache["pos"] + 1}
+
+    def prefill(self, params, batch, max_len: int):
+        """Chunked-SSD forward that also returns the final recurrent state."""
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        b, s = x.shape[:2]
+
+        states, convs = [], []
+
+        def body(x, p):
+            # recompute-free prefill: run layer, capture final state
+            bsz, sl, d = x.shape
+            h_in = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+            z, xbc, dt = self._split_proj(L.dense(p["in_proj"], h_in))
+            xbc_c, conv_tail = _causal_conv(xbc, p["conv_w"])
+            xbc_a = jax.nn.silu(xbc_c.astype(jnp.float32)).astype(x.dtype)
+            xc = xbc_a[..., : self.d_in].reshape(bsz, sl, self.h, self.p)
+            Bm = xbc_a[..., self.d_in : self.d_in + self.n].astype(jnp.float32)
+            Cm = xbc_a[..., self.d_in + self.n :].astype(jnp.float32)
+            dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+            A = -jnp.exp(p["A_log"])
+            y, hT = ssd_chunked(xc.astype(jnp.float32) * dtf[..., None],
+                                dtf * A, Bm, Cm, cfg.ssm_chunk)
+            y = y + xc.astype(jnp.float32) * p["D"][None, None, :, None]
+            y = y.reshape(bsz, sl, self.d_in) * jax.nn.silu(z.astype(jnp.float32))
+            y = L.rmsnorm(p["gate_ln"], y.astype(x.dtype), cfg.norm_eps)
+            return x + L.dense(p["out_proj"], y), (hT, conv_tail)
+
+        x, (hTs, conv_tails) = jax.lax.scan(body, x, params["layers"])
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.mask_padded_vocab(
+            x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32),
+            cfg.vocab)
+        cache = {"ssm": hTs, "conv": conv_tails,
+                 "pos": jnp.asarray(s, jnp.int32)}
+        return logits, cache

@@ -1,0 +1,276 @@
+"""Decoder-only transformer covering the dense, MoE, and VLM families
+(gemma2, qwen1.5, minicpm, arctic, dbrx, paligemma).
+
+Layers are scan-stacked (params carry a leading (L, ...) dim) with per-layer
+remat, so compiled HLO is O(1) in depth — required for 40–64-layer dry-run
+compiles. Heterogeneity across layers (gemma2's local/global alternation) is
+expressed as *data* (a per-layer window-size vector fed to the scan), never as
+per-layer code, keeping the stack homogeneous.
+
+Three entry points per model: ``apply_train`` (full causal forward, returns
+logits + aux), ``prefill`` (forward + KV-cache emission), ``decode_step``
+(one token against the cache). PaliGemma reuses this model with a
+patch-embedding prefix and prefix-bidirectional masking.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models.meshctx import constrain
+
+__all__ = ["TransformerLM"]
+
+_NO_WINDOW = L.NO_WINDOW
+
+
+def _layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer attention window sizes; _NO_WINDOW = global attention."""
+    if cfg.local_global_pattern and cfg.sliding_window:
+        w = [cfg.sliding_window if i % 2 == 0 else _NO_WINDOW
+             for i in range(cfg.num_layers)]
+    elif cfg.sliding_window:
+        w = [cfg.sliding_window] * cfg.num_layers
+    else:
+        w = [_NO_WINDOW] * cfg.num_layers
+    return jnp.asarray(w, dtype=jnp.int32)
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params
+
+    def _init_layer(self, key, dtype):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        p = {
+            "ln1": L.rmsnorm_init(cfg.d_model, dtype),
+            "attn": L.init_attention_block(ks[0], cfg, dtype),
+            "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+        }
+        if cfg.family == "moe":
+            p["moe"] = L.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff,
+                                  gated=(cfg.act == "silu"), dtype=dtype)
+        if cfg.post_norms:
+            p["ln1_post"] = L.rmsnorm_init(cfg.d_model, dtype)
+            p["ln2_post"] = L.rmsnorm_init(cfg.d_model, dtype)
+        return p
+
+    def init(self, key, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        k_emb, k_layers, k_vis = jax.random.split(key, 3)
+        layer_keys = jax.random.split(k_layers, cfg.num_layers)
+        stacked = jax.vmap(lambda k: self._init_layer(k, dtype))(layer_keys)
+        params = {
+            "embed": (jax.random.normal(
+                k_emb, (cfg.padded_vocab, cfg.d_model)) * 0.02).astype(dtype),
+            "layers": stacked,
+            "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+        }
+        if cfg.family == "vlm":
+            params["vision_proj"] = L.dense_init(
+                k_vis, cfg.vision_dim, cfg.d_model, dtype=dtype)
+        return params
+
+    # ------------------------------------------------------------ helpers
+
+    def _embed(self, params, tokens, patches=None):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        if cfg.scale_embedding:
+            x = (x.astype(jnp.float32) * jnp.sqrt(cfg.d_model)).astype(x.dtype)
+        prefix_len = 0
+        if cfg.family == "vlm":
+            assert patches is not None
+            vis = L.dense(params["vision_proj"], patches.astype(x.dtype))
+            x = jnp.concatenate([vis, x], axis=1)
+            prefix_len = patches.shape[1]
+        return x, prefix_len
+
+    def _unembed(self, params, x):
+        cfg = self.cfg
+        logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+        return L.mask_padded_vocab(L.softcap(logits, cfg.final_softcap),
+                                   cfg.vocab)
+
+    def _layer_fwd(self, p, x, window, *, q_pos, k_pos, prefix_len,
+                   kv_override=None, cache=None, cur_pos=None):
+        """One block. Returns (x, aux, (k, v)) — k/v for cache emission."""
+        cfg = self.cfg
+        b, s, d = x.shape
+        hd, hq, hkv = cfg.head_dim, cfg.num_heads, cfg.kv_heads
+        x = constrain(x, "batch", None, None)
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        q = L.dense(p["attn"]["wq"], h).reshape(b, s, hq, hd)
+        k = L.dense(p["attn"]["wk"], h).reshape(b, s, hkv, hd)
+        v = L.dense(p["attn"]["wv"], h).reshape(b, s, hkv, hd)
+        q = L.rope(q, q_pos[None, :], cfg.rope_theta)
+        k = L.rope(k, q_pos[None, :], cfg.rope_theta)
+        if cache is not None:
+            if cfg.kv_cache_dtype == "int8":
+                ck, cv, ks, vs = cache
+                kq, ks_new = L.quantize_kv(k)
+                vq, vs_new = L.quantize_kv(v)
+                ck = jax.lax.dynamic_update_slice(ck, kq, (0, cur_pos, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cv, vq, (0, cur_pos, 0, 0))
+                ks = jax.lax.dynamic_update_slice(ks, ks_new, (0, cur_pos, 0))
+                vs = jax.lax.dynamic_update_slice(vs, vs_new, (0, cur_pos, 0))
+                att = L.decode_attention(
+                    q, L.dequantize_kv(ck, ks, k.dtype),
+                    L.dequantize_kv(cv, vs, v.dtype), cur_pos=cur_pos,
+                    window=window, cap=cfg.logit_softcap)
+                newkv = (ck, cv, ks, vs)
+            else:
+                ck, cv = cache
+                ck = jax.lax.dynamic_update_slice(ck, k, (0, cur_pos, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cv, v, (0, cur_pos, 0, 0))
+                att = L.decode_attention(q, ck, cv, cur_pos=cur_pos,
+                                         window=window, cap=cfg.logit_softcap)
+                newkv = (ck, cv)
+        else:
+            att = L.attention(q, k, v, q_pos=q_pos, k_pos=q_pos,
+                              window=window, cap=cfg.logit_softcap,
+                              prefix_len=prefix_len)
+            newkv = (k, v)
+        att = L.dense(p["attn"]["wo"], att.reshape(b, s, hq * hd))
+        if cfg.post_norms:
+            att = L.rmsnorm(p["ln1_post"], att, cfg.norm_eps)
+        x = x + att * cfg.residual_scale
+        h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            f, aux = L.moe(p["moe"], h2, cfg)
+        else:
+            f, aux = L.mlp(p["mlp"], h2, cfg.act), jnp.float32(0)
+        if cfg.post_norms:
+            f = L.rmsnorm(p["ln2_post"], f, cfg.norm_eps)
+        x = constrain(x + f * cfg.residual_scale, "batch", None, None)
+        return x, aux, newkv
+
+    # ----------------------------------------------------------- forwards
+
+    def apply_train(self, params, batch):
+        """batch: {tokens (B,S)[, patches (B,P,Dv)]} → (logits, aux)."""
+        cfg = self.cfg
+        x, prefix_len = self._embed(params, batch["tokens"],
+                                    batch.get("patches"))
+        s = x.shape[1]
+        q_pos = jnp.arange(s)
+        windows = _layer_windows(cfg)
+
+        def body(carry, xs):
+            x, aux = carry
+            p, w = xs
+            x, a, _ = self._layer_fwd(p, x, w, q_pos=q_pos, k_pos=q_pos,
+                                      prefix_len=prefix_len)
+            return (x, aux + a), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)),
+                                   (params["layers"], windows))
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._unembed(params, x)
+        if prefix_len:
+            logits = logits[:, prefix_len:]
+        return logits, aux
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        shape = (cfg.num_layers, batch, max_len, cfg.kv_heads, cfg.head_dim)
+        if cfg.kv_cache_dtype == "int8":
+            return {"k": jnp.zeros(shape, jnp.int8),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "k_scale": jnp.zeros(shape[:-1], jnp.bfloat16),
+                    "v_scale": jnp.zeros(shape[:-1], jnp.bfloat16),
+                    "pos": jnp.zeros((), jnp.int32)}
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        """tokens (B, 1); cache from init_cache/prefill. One new token."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = params["embed"][tokens]
+        if cfg.scale_embedding:
+            x = (x.astype(jnp.float32) * jnp.sqrt(cfg.d_model)).astype(x.dtype)
+        q_pos = pos[None]
+        windows = _layer_windows(cfg)
+        quant = cfg.kv_cache_dtype == "int8"
+
+        def body(x, xs):
+            if quant:
+                p, w, ck, cv, ks, vs = xs
+                x, _, newkv = self._layer_fwd(
+                    p, x, w, q_pos=q_pos, k_pos=None, prefix_len=0,
+                    cache=(ck, cv, ks, vs), cur_pos=pos)
+            else:
+                p, w, ck, cv = xs
+                x, _, newkv = self._layer_fwd(
+                    p, x, w, q_pos=q_pos, k_pos=None, prefix_len=0,
+                    cache=(ck, cv), cur_pos=pos)
+            return x, newkv
+
+        if quant:
+            x, (nk, nv, nks, nvs) = jax.lax.scan(
+                body, x, (params["layers"], windows, cache["k"], cache["v"],
+                          cache["k_scale"], cache["v_scale"]))
+            new_cache = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs,
+                         "pos": pos + 1}
+        else:
+            x, (nk, nv) = jax.lax.scan(
+                body, x, (params["layers"], windows, cache["k"], cache["v"]))
+            new_cache = {"k": nk, "v": nv, "pos": pos + 1}
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._unembed(params, x)
+        return logits, new_cache
+
+    def prefill(self, params, batch, max_len: int):
+        """Full forward over the prompt, emitting the KV cache."""
+        cfg = self.cfg
+        x, prefix_len = self._embed(params, batch["tokens"],
+                                    batch.get("patches"))
+        b, s, _ = x.shape
+        q_pos = jnp.arange(s)
+        windows = _layer_windows(cfg)
+
+        quant = cfg.kv_cache_dtype == "int8"
+
+        def body(x, xs):
+            p, w = xs
+            x, _, (k, v) = self._layer_fwd(p, x, w, q_pos=q_pos, k_pos=q_pos,
+                                           prefix_len=prefix_len)
+            if quant:  # per-layer quantization: never stacks an f32 cache
+                kq, kscale = L.quantize_kv(k)
+                vq, vscale = L.quantize_kv(v)
+                return x, (kq, vq, kscale, vscale)
+            return x, (k, v)
+
+        x, kvs = jax.lax.scan(body, x, (params["layers"], windows))
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._unembed(params, x)
+        pad = max_len - s
+        pad5 = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+        if quant:
+            kq, vq, kscale, vscale = kvs
+            cache = {
+                "k": jnp.pad(kq, pad5), "v": jnp.pad(vq, pad5),
+                "k_scale": jnp.pad(kscale, pad5[:-1]),
+                "v_scale": jnp.pad(vscale, pad5[:-1]),
+                "pos": jnp.asarray(s, jnp.int32),
+            }
+        else:
+            ks, vs = kvs
+            cache = {
+                "k": jnp.pad(ks, pad5), "v": jnp.pad(vs, pad5),
+                "pos": jnp.asarray(s, jnp.int32),
+            }
+        return logits, cache

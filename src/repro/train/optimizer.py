@@ -1,0 +1,107 @@
+"""AdamW with warmup-stable-decay (WSD) schedule — no external deps.
+
+WSD (the MiniCPM schedule, [arXiv:2404.06395]): linear warmup → constant
+plateau → short exponential-to-zero decay tail. Falls back to cosine via
+``schedule="cosine"``.
+
+Moment dtype follows ``ModelConfig.adam_dtype``: bf16 moments halve optimizer
+HBM (the difference between arctic-480b fitting a 256-chip pod or not — see
+EXPERIMENTS.md §Dry-run); small-model runs use fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update", "wsd_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    stable_steps: int = 1000
+    decay_steps: int = 100
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "wsd"  # wsd | cosine | constant
+    moment_dtype: Any = jnp.bfloat16
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def wsd_schedule(step, cfg: AdamWConfig):
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    if cfg.schedule == "constant":
+        return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr)
+    if cfg.schedule == "cosine":
+        total = cfg.stable_steps + cfg.decay_steps
+        frac = jnp.clip((step - cfg.warmup_steps) / max(total, 1), 0.0, 1.0)
+        return jnp.where(
+            step < cfg.warmup_steps, warm,
+            0.5 * cfg.peak_lr * (1 + jnp.cos(jnp.pi * frac)))
+    # wsd: plateau then exponential tail to ~1% of peak
+    decay_start = cfg.warmup_steps + cfg.stable_steps
+    tail = jnp.clip((step - decay_start) / max(cfg.decay_steps, 1), 0.0, 1.0)
+    return jnp.where(
+        step < cfg.warmup_steps, warm,
+        jnp.where(step < decay_start, cfg.peak_lr,
+                  cfg.peak_lr * jnp.power(0.01, tail)))
+
+
+def adamw_init(params, cfg: AdamWConfig) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: OptState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = wsd_schedule(step, cfg)
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(cfg.moment_dtype),
+                v_new.astype(cfg.moment_dtype))
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_p = jax.tree.leaves(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(step=step, mu=new_m, nu=new_v), metrics

@@ -1,0 +1,41 @@
+"""Serving steps: batched prefill, single-token decode, and a fori-loop
+generate driver. These are the functions the decode_* / long_* dry-run cells
+lower (one new token against a seq_len KV cache / recurrent state)."""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["make_serve_fns", "greedy_generate"]
+
+
+def make_serve_fns(model, cfg: ModelConfig):
+    def prefill(params, batch, max_len: int):
+        return model.prefill(params, batch, max_len)
+
+    def decode_step(params, cache, tokens):
+        """tokens (B, 1) — returns (logits (B,1,V), new cache)."""
+        return model.decode_step(params, cache, tokens)
+
+    return prefill, decode_step
+
+
+def greedy_generate(model, cfg: ModelConfig, params, prompt_batch,
+                    *, steps: int, max_len: int):
+    """Prefill the prompt then greedy-decode ``steps`` tokens (scan-driven)."""
+    logits, cache = model.prefill(params, prompt_batch, max_len)
+    first = jnp.argmax(logits[:, -1:], axis=-1)
+
+    def body(carry, _):
+        cache, tok = carry
+        lg, cache = model.decode_step(params, cache, tok)
+        nxt = jnp.argmax(lg[:, -1:], axis=-1)
+        return (cache, nxt), tok[:, 0]
+
+    (_, _), toks = jax.lax.scan(body, (cache, first), None, length=steps)
+    return toks.swapaxes(0, 1)  # (B, steps)

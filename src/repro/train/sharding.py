@@ -1,0 +1,169 @@
+"""Parameter / activation / optimizer sharding rules.
+
+Rules are path-pattern → PartitionSpec, applied to the param pytree. The
+scheme is Megatron-style TP on "model" with optional FSDP on "data":
+
+  embed (V, D)                → (model, None)   vocab-parallel embedding
+  attn wq/wk/wv (D, H·hd)     → (fsdp?, model)  column-parallel
+  attn wo (H·hd, D)           → (model, fsdp?)  row-parallel
+  mlp wi/wg (D, F)            → (fsdp?, model)
+  mlp wo (F, D)               → (model, fsdp?)
+  moe wi/wg (E, D, F)         → (model, fsdp?, None)  expert-parallel
+  moe wo (E, F, D)            → (model, None, fsdp?)
+  ssm in/out projections      → column/row parallel like attention
+  scalars/norms/biases        → replicated
+
+Layer-stacked params carry a leading L (or group G) dim → specs get None
+prepended automatically. Optimizer moments inherit the param spec (they are
+elementwise) — with fsdp=True that is ZeRO-3; without it, moments still shard
+over "model" (ZeRO wrt TP).
+
+"pod" is deliberately never used for params: parameters are replicated across
+pods and gradients reduce hierarchically (GSPMD emits intra-pod
+reduce-scatter + inter-pod all-reduce from the batch sharding alone).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "param_shardings", "batch_specs", "cache_specs"]
+
+# (regex over '/'-joined path, spec WITHOUT the stacked-layer leading axis)
+_RULES = [
+    (r"embed$", ("model", None)),
+    (r"dec_pos$", (None, None)),
+    (r"vision_proj/w$", (None, "model")),
+    # attention
+    (r"(attn|xattn)/w[qkv]/w$", ("_fsdp", "model")),
+    (r"(attn|xattn)/w[qkv]/b$", ("model",)),
+    (r"(attn|xattn)/wo/w$", ("model", "_fsdp")),
+    # dense mlp
+    (r"(mlp|dense)/w[ig]/w$", ("_fsdp", "model")),
+    (r"(mlp|dense)/wo/w$", ("model", "_fsdp")),
+    # moe experts: expert dim over model (EP), feature dims over fsdp
+    (r"moe/router$", (None, None)),
+    (r"moe/w[ig]$", ("model", "_fsdp", None)),
+    (r"moe/wo$", ("model", None, "_fsdp")),
+    # mamba2
+    (r"in_proj/w$", ("_fsdp", "model")),
+    (r"out_proj/w$", ("model", "_fsdp")),
+    (r"conv_w$", (None, "model")),
+    # griffin recurrent branch
+    (r"(in_x|in_gate)/w$", ("_fsdp", "model")),
+    (r"out/w$", ("model", "_fsdp")),
+    (r"(gate_[ri]_[wb]|lam)$", ("model",)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _spec_for(path_s: str, ndim: int, fsdp: bool) -> P:
+    for pat, spec in _RULES:
+        if re.search(pat, path_s):
+            axes = tuple(("data" if fsdp else None) if a == "_fsdp" else a
+                         for a in spec)
+            # stacked-layer leading dims: pad with None on the left
+            pad = ndim - len(axes)
+            if pad < 0:  # rule is wider than the actual array (e.g. no bias)
+                axes = axes[-ndim:] if ndim else ()
+            return P(*((None,) * max(pad, 0) + axes))
+    return P()  # replicate (norms, scalars, small tables)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a] if a in mesh.shape else 1
+    return n
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes don't divide (jit rejects
+    non-divisible *argument* shardings; replication is always legal).
+    E.g. mamba2's vocab 50280 and minicpm's 122753 aren't 16-divisible."""
+    out = []
+    for i, entry in enumerate(spec):
+        if i >= len(shape) or entry is None:
+            out.append(entry)
+            continue
+        out.append(entry if shape[i] % _axis_size(mesh, entry) == 0 else None)
+    return P(*out)
+
+
+def param_specs(params, *, fsdp: bool = False):
+    """Pytree of PartitionSpec matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: _spec_for(_path_str(path), x.ndim, fsdp), params)
+
+
+def param_shardings(params, mesh: Mesh, *, fsdp: bool = False):
+    specs = param_specs(params, fsdp=fsdp)
+    return jax.tree.map(
+        lambda s, x: NamedSharding(mesh, sanitize_spec(s, x.shape, mesh)),
+        specs, params)
+
+
+def batch_specs(batch_axes=("data",), with_pod: bool = True):
+    """Spec for a training batch dict: batch dim over (pod, data)."""
+
+    def spec(x=None):
+        return P(batch_axes)
+
+    return spec
+
+
+def data_axis(mesh: Mesh):
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def batch_sharding(mesh: Mesh, ndim_or_aval):
+    """Batch-leading sharding for an input array. Accepts an abstract value
+    (preferred — enables the divisibility check) or a plain rank."""
+    ax = data_axis(mesh)
+    if hasattr(ndim_or_aval, "shape"):
+        shape = ndim_or_aval.shape
+        spec = sanitize_spec(P(ax, *([None] * (len(shape) - 1))), shape, mesh)
+        return NamedSharding(mesh, spec)
+    return NamedSharding(mesh, P(ax, *([None] * (ndim_or_aval - 1))))
+
+
+def cache_specs(cache, mesh: Mesh, batch_size: int):
+    """KV/state caches: shard the batch dim (identified by size — caches are
+    (L, B, ...) for scan-stacked models but (B, ...) for hybrid ring-buffer
+    blocks) over data; for layer-stacked 5D KV caches (L, B, T, H, hd) also
+    shard heads over model when divisible. batch=1 (long_500k) replicates."""
+    ax = data_axis(mesh)
+
+    def spec(x):
+        entries = [None] * x.ndim
+        for i, d in enumerate(x.shape[:2]):  # batch dim is dim 0 or 1
+            if d == batch_size:
+                entries[i] = ax
+                break
+        if x.ndim >= 5:  # (L, B, T, H, hd): heads over model, else seq
+            if x.shape[3] % _axis_size(mesh, "model") == 0:
+                entries[3] = "model"
+            else:  # MHA archs (qwen 40H, minicpm 36H): flash-decode style
+                entries[2] = "model"
+        s = sanitize_spec(P(*entries), x.shape, mesh)
+        return NamedSharding(mesh, s)
+
+    return jax.tree.map(spec, cache)

@@ -1,0 +1,102 @@
+"""Training step: loss, gradient accumulation (microbatching), optimizer.
+
+Gradient accumulation is a `lax.scan` over microbatches with fp32 grad
+accumulators, so peak activation memory is one microbatch regardless of the
+global batch — together with per-layer remat this is what bounds arctic-480b
+train_4k activations per chip (see EXPERIMENTS.md §Dry-run).
+
+Everything is mesh-free; distribution enters only through the shardings the
+launcher attaches via jax.jit in/out_shardings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.train.optimizer import AdamWConfig, OptState, adamw_init, adamw_update
+
+__all__ = ["make_loss_fn", "make_train_step", "init_train_state"]
+
+_MOE_AUX_WEIGHT = 0.01
+
+
+def make_loss_fn(model, cfg: ModelConfig) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = model.apply_train(params, batch)
+        labels = batch["labels"]
+        valid = (labels >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        # xent = logsumexp − label logit: avoids materializing log_softmax
+        # over the full (tokens, vocab) plane (a §Perf memory-term win)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0] - lse
+        ntok = jnp.maximum(valid.sum(), 1.0)
+        xent = -(ll * valid).sum() / ntok
+        loss = xent + _MOE_AUX_WEIGHT * aux
+        return loss, {"xent": xent, "aux": aux, "ntok": ntok}
+
+    return loss_fn
+
+
+def init_train_state(model, cfg: ModelConfig, opt_cfg: AdamWConfig, key,
+                     dtype=jnp.bfloat16):
+    params = model.init(key, dtype=dtype)
+    opt_state = adamw_init(params, opt_cfg)
+    return params, opt_state
+
+
+def make_train_step(model, cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    *, microbatches: Optional[int] = None) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``batch`` arrays have the GLOBAL batch leading dim; with microbatching it
+    is split as (n_micro, B/n_micro, ...) inside the step (a reshape, so the
+    batch sharding on dim 0 survives on dim 1).
+    """
+    n_micro = microbatches if microbatches is not None else cfg.microbatches
+    acc_dtype = (jnp.bfloat16 if cfg.grad_accum_dtype == "bfloat16"
+                 else jnp.float32)
+    loss_fn = make_loss_fn(model, cfg)
+    grad_fn = jax.grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: OptState, batch):
+        if n_micro <= 1:
+            grads, metrics = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % n_micro == 0, (b, n_micro)
+                # STRIDED split (b-major), not contiguous: microbatch m takes
+                # rows {k·n_micro + m}. A contiguous split would place each
+                # microbatch on a 1/n_micro slice of the data-parallel axis
+                # and GSPMD would replicate compute ~n_micro× (observed 8×
+                # flops inflation in the dry-run before this fix — see
+                # EXPERIMENTS.md §Perf iteration 0).
+                return x.reshape(b // n_micro, n_micro,
+                                 *x.shape[1:]).swapaxes(0, 1)
+
+            micro = jax.tree.map(split, batch)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+
+            def body(acc, mb):
+                g, m = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(acc_dtype) / n_micro, acc, g)
+                return acc, m
+
+            grads, ms = jax.lax.scan(body, acc0, micro)
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params, opt_cfg)
+        metrics = {**metrics, **opt_metrics,
+                   "loss": metrics["xent"] + _MOE_AUX_WEIGHT * metrics["aux"]}
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,97 @@
+"""Multi-device semantics on 8 placeholder CPU devices.
+
+Runs in a SUBPROCESS so the XLA device-count flag never leaks into the other
+tests (jax locks device count at first init)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.launch.mesh import make_mesh
+from repro.graphs import rmat_graph, grid_graph
+from repro.core import (triangle_count_matrix_distributed,
+                        triangle_count_intersection_distributed,
+                        triangle_count_scipy)
+
+out = {}
+mesh = make_mesh((4, 2), ("data", "model"))
+g = rmat_graph(9, 8, seed=5)
+truth = triangle_count_scipy(g)
+out["matrix_2d"] = triangle_count_matrix_distributed(g, mesh, block=32) == truth
+out["intersect_2d"] = triangle_count_intersection_distributed(g, mesh) == truth
+g2 = grid_graph(12, seed=2)
+t2 = triangle_count_scipy(g2)
+mesh1 = make_mesh((8,), ("data",))
+out["matrix_1d"] = triangle_count_matrix_distributed(g2, mesh1, block=16) == t2
+
+# gradient parity: sharded train step == single-device reference
+from repro.models.registry import get_model, get_reduced_config
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+from repro.train.sharding import param_shardings, batch_sharding
+from repro.train.data import SyntheticDataConfig, make_batch
+from repro.models.meshctx import activation_mesh
+
+cfg = get_reduced_config("gemma2-2b")
+model = get_model(cfg)
+opt_cfg = AdamWConfig(peak_lr=1e-3, warmup_steps=1, moment_dtype=jnp.float32)
+params, opt = init_train_state(model, cfg, opt_cfg, jax.random.key(0),
+                               dtype=jnp.float32)
+batch = {k: jnp.asarray(v) for k, v in make_batch(
+    cfg, SyntheticDataConfig(8, 17), 0).items()}
+step = make_train_step(model, cfg, opt_cfg, microbatches=2)
+p_ref, _, m_ref = jax.jit(step)(params, opt, batch)
+
+p_sh = param_shardings(params, mesh)
+b_sh = {k: batch_sharding(mesh, v) for k, v in batch.items()}
+with activation_mesh(mesh):
+    sharded = jax.jit(step, in_shardings=(p_sh, None, b_sh)).lower(
+        params, opt, batch).compile()
+p_dist, _, m_dist = sharded(jax.device_put(params, p_sh), opt,
+                            jax.tree.map(lambda x, s: jax.device_put(x, s),
+                                         batch, b_sh))
+out["loss_parity"] = bool(np.isclose(float(m_ref["loss"]),
+                                     float(m_dist["loss"]), rtol=1e-4))
+flat_r = jax.tree.leaves(p_ref)
+flat_d = jax.tree.leaves(p_dist)
+out["param_parity"] = all(
+    np.allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-5)
+    for a, b in zip(flat_r, flat_d))
+
+# compressed psum on a real mesh axis
+from repro.train.compression import ef_psum, ef_init
+from jax.sharding import PartitionSpec as P
+
+def worker(g):
+    deq, _ = ef_psum({"w": g}, ef_init({"w": g}), "data")
+    return deq["w"]
+
+gs = jnp.arange(32, dtype=jnp.float32).reshape(8, 4) * 1e-3
+got = jax.jit(jax.shard_map(worker, mesh=mesh1, in_specs=P("data"),
+                            out_specs=P("data")))(gs)
+want = gs.sum(axis=0, keepdims=True)
+out["ef_psum"] = bool(np.allclose(np.asarray(got[0]), np.asarray(want[0]),
+                                  atol=2e-3))
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def test_distributed_semantics():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    assert line, proc.stdout
+    out = json.loads(line[0][len("RESULT:"):])
+    assert all(out.values()), out

@@ -1,0 +1,96 @@
+"""Graph substrate + HLO cost analyzer unit tests."""
+
+import numpy as np
+import pytest
+
+from repro.graphs.formats import (
+    BlockSparse, bucket_edges_by_degree, csr_to_padded_neighbors,
+    degree_order_permutation, edges_to_csr, induced_subgraph, orient_forward,
+    to_block_sparse, apply_permutation,
+)
+from repro.graphs import rmat_graph, complete_graph
+
+
+def test_edges_to_csr_cleans_input():
+    # dirty: self loops, duplicates, both directions
+    g = edges_to_csr(np.array([0, 0, 1, 1, 2]), np.array([0, 1, 0, 2, 1]), n=3)
+    assert g.m_undirected == 2  # (0,1), (1,2)
+    np.testing.assert_array_equal(g.neighbors(1), [0, 2])
+
+
+def test_degree_order_permutation():
+    g = edges_to_csr(np.array([0, 0, 0, 1]), np.array([1, 2, 3, 2]), n=4)
+    perm = degree_order_permutation(g)
+    d = g.degrees
+    assert (np.diff(d[perm]) >= 0).all()
+    g2 = apply_permutation(g, perm)
+    assert g2.m_undirected == g.m_undirected
+
+
+def test_padded_neighbors_sentinel_and_truncate():
+    g = edges_to_csr(np.array([0, 0, 0]), np.array([1, 2, 3]), n=4)
+    nb = csr_to_padded_neighbors(g, pad_to=2)
+    assert nb.shape == (4, 2)
+    np.testing.assert_array_equal(nb[1], [0, 4])  # padded with n
+    np.testing.assert_array_equal(nb[0], [1, 2])  # truncated row
+
+
+def test_block_sparse_roundtrip():
+    g = rmat_graph(7, 6, seed=3)
+    bsr = to_block_sparse(g, block=32, part="full")
+    dense = bsr.to_dense()[:g.n, :g.n]
+    ref = g.to_scipy().toarray()
+    np.testing.assert_array_equal(dense.astype(bool), ref.astype(bool))
+    low = to_block_sparse(g, block=32, part="lower").to_dense()[:g.n, :g.n]
+    assert (np.triu(low) == 0).all()
+
+
+def test_bucketing_covers_all_edges():
+    g = rmat_graph(8, 8, seed=1)
+    dag = orient_forward(g)
+    src = np.repeat(np.arange(dag.n, dtype=np.int32), dag.degrees)
+    buckets = bucket_edges_by_degree(src, dag.col_idx, dag.degrees)
+    assert sum(b["src"].shape[0] for b in buckets) == dag.m_directed
+    for b in buckets:
+        w = np.maximum(dag.degrees[b["src"]], dag.degrees[b["dst"]])
+        assert (w <= b["width"]).all()
+
+
+def test_induced_subgraph_relabels():
+    g = complete_graph(5)
+    mask = np.array([True, False, True, True, False])
+    sub, old = induced_subgraph(g, mask)
+    assert sub.n == 3 and sub.m_undirected == 3
+    np.testing.assert_array_equal(old, [0, 2, 3])
+
+
+def test_hlo_cost_analyzer_known_flops():
+    """Scan with known trip count: analyzer must multiply the body."""
+    import jax, jax.numpy as jnp
+    from repro.launch.hlo_cost import analyze_hlo
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, None, length=7)
+        return c.sum()
+
+    lowered = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 32), jnp.float32),
+        jax.ShapeDtypeStruct((32, 32), jnp.float32))
+    hc = analyze_hlo(lowered.compile().as_text())
+    want = 7 * 2 * 64 * 32 * 32  # 7 iterations of (64,32)@(32,32)
+    assert abs(hc.flops - want) / want < 0.05, (hc.flops, want)
+
+
+def test_hlo_collective_parser():
+    from repro.launch.roofline import collective_bytes
+    hlo = """
+ENTRY %main (p: f32[16]) -> f32[16] {
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups=[4,8]<=[32], to_apply=%sum
+  %ag = bf16[2048]{0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == pytest.approx(2 * (7 / 8) * 4096)
+    assert out["all-gather"] == pytest.approx((3 / 4) * 4096)

@@ -1,0 +1,79 @@
+"""Launcher machinery tests that don't need placeholder devices."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.specs import SHAPES, cell_spec, input_specs, skip_reason
+from repro.models.registry import ARCHS, get_config
+
+
+def test_shapes_cover_assignment():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+    assert SHAPES["train_4k"]["global_batch"] == 256
+    assert SHAPES["long_500k"]["seq_len"] == 524288
+
+
+def test_skip_rules():
+    # sub-quadratic archs run long_500k; quadratic ones skip it
+    assert skip_reason(get_config("mamba2-780m"), "long_500k") is None
+    assert skip_reason(get_config("recurrentgemma-9b"), "long_500k") is None
+    for arch in ("gemma2-2b", "qwen1.5-4b", "arctic-480b", "whisper-medium",
+                 "paligemma-3b"):
+        assert skip_reason(get_config(arch), "long_500k") is not None
+    assert skip_reason(get_config("gemma2-2b"), "train_4k") is None
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_train(arch):
+    specs = input_specs(arch, "train_4k")
+    assert specs["tokens"].shape == (256, 4096)
+    assert specs["labels"].shape == (256, 4096)
+    cfg = get_config(arch)
+    if cfg.family == "encdec":
+        assert specs["frames"].shape == (256, cfg.encoder_seq, cfg.d_model)
+    if cfg.family == "vlm":
+        assert specs["patches"].shape == (256, cfg.vision_tokens,
+                                          cfg.vision_dim)
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "mamba2-780m",
+                                  "recurrentgemma-9b", "whisper-medium",
+                                  "qwen1.5-32b"])
+def test_input_specs_decode_cache_abstract(arch):
+    """Decode specs build abstract caches without allocating."""
+    specs = input_specs(arch, "decode_32k")
+    assert specs["tokens"].shape == (128, 1)
+    import jax
+    leaves = jax.tree.leaves(specs["cache"])
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    if arch == "qwen1.5-32b":  # int8 KV cache config
+        dtypes = {str(l.dtype) for l in leaves}
+        assert "int8" in dtypes
+
+
+def test_model_flops_accounting():
+    from repro.launch.dryrun import _model_flops_per_chip
+
+    cfg = get_config("gemma2-2b")
+    cell = cell_spec("gemma2-2b", "train_4k")
+    f = _model_flops_per_chip(cfg, cell, 256)
+    want = 6 * cfg.param_count() * 256 * 4096 / 256
+    assert abs(f - want) / want < 1e-6
+
+
+def test_report_roundtrip(tmp_path):
+    import json
+    from repro.launch.report import load, roofline_table, summary
+
+    rec = dict(arch="a", shape="s", mesh="16x16", status="ok",
+               memory={"temp_size_in_bytes": 1}, kind="train", chips=256,
+               roofline=dict(t_compute=1.0, t_memory=2.0, t_collective=0.5,
+                             dominant="memory", useful_ratio=0.5, flops=1,
+                             hbm_bytes=1, coll_bytes=1, coll_by_kind={},
+                             model_flops=1))
+    p = tmp_path / "d.jsonl"
+    p.write_text(json.dumps(rec) + "\n")
+    recs = load(str(p))
+    assert "1 ok" in summary(recs)
+    assert "| a | s | ok " in roofline_table(recs)

@@ -1,0 +1,53 @@
+"""Sharding-rule unit tests (no devices needed — specs only)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.registry import get_model, get_reduced_config
+from repro.train.sharding import param_specs, sanitize_spec
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_sanitize_spec_drops_nondivisible():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    assert sanitize_spec(P("model", None), (50280, 64), mesh) == P(None, None)
+    assert sanitize_spec(P("model", None), (256000, 64), mesh) == \
+        P("model", None)
+    assert sanitize_spec(P(("data", "model"), None), (1, 5), mesh) == \
+        P(None, None)
+
+
+def test_param_specs_rules():
+    cfg = get_reduced_config("gemma2-2b")
+    model = get_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0),
+                                               dtype=jnp.float32))
+    specs = param_specs(params)
+    assert specs["embed"] == P("model", None)
+    # scan-stacked layers get a leading None
+    assert specs["layers"]["attn"]["wq"]["w"] == P(None, None, "model")
+    assert specs["layers"]["attn"]["wo"]["w"] == P(None, "model", None)
+    assert specs["layers"]["ln1"]["scale"] == P()
+
+
+def test_param_specs_fsdp_and_moe():
+    cfg = get_reduced_config("arctic-480b")
+    model = get_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0),
+                                               dtype=jnp.float32))
+    specs = param_specs(params, fsdp=True)
+    assert specs["layers"]["moe"]["wi"] == P(None, "model", "data", None)
+    assert specs["layers"]["moe"]["wo"] == P(None, "model", None, "data")
+    assert specs["layers"]["attn"]["wq"]["w"] == P(None, "data", "model")
+
+
+def test_meshctx_noop_without_mesh():
+    from repro.models.meshctx import constrain
+    x = jnp.ones((4, 4))
+    assert constrain(x, "batch", None) is x

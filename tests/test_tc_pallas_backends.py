@@ -1,0 +1,24 @@
+"""The public TC API through the Pallas kernels (interpret mode)."""
+
+import pytest
+
+from repro.graphs import grid_graph, rmat_graph
+from repro.core import (
+    triangle_count_intersection, triangle_count_matrix, triangle_count_scipy,
+)
+
+
+@pytest.mark.parametrize("g", [rmat_graph(8, 6, seed=11), grid_graph(9, seed=2)],
+                         ids=lambda g: g.name)
+def test_pallas_intersection_end_to_end(g):
+    truth = triangle_count_scipy(g)
+    assert triangle_count_intersection(g, backend="pallas",
+                                       interpret=True) == truth
+
+
+@pytest.mark.parametrize("block", [16, 32])
+def test_pallas_matrix_end_to_end(block):
+    g = rmat_graph(8, 6, seed=12)
+    truth = triangle_count_scipy(g)
+    assert triangle_count_matrix(g, block=block, backend="pallas",
+                                 interpret=True) == truth

@@ -1,0 +1,78 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs.formats import edges_to_csr, apply_permutation, orient_forward
+from repro.core import (
+    triangle_count_intersection, triangle_count_matrix,
+    triangle_count_subgraph, triangle_count_scipy,
+)
+
+
+def _graph_strategy(max_n=40, max_m=160):
+    return st.integers(4, max_n).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.lists(st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+                     min_size=0, max_size=max_m),
+        ))
+
+
+@given(_graph_strategy())
+@settings(max_examples=40, deadline=None)
+def test_all_methods_agree(spec):
+    n, edges = spec
+    src = np.array([e[0] for e in edges], dtype=np.int64)
+    dst = np.array([e[1] for e in edges], dtype=np.int64)
+    g = edges_to_csr(src, dst, n=n)
+    truth = triangle_count_scipy(g)
+    assert triangle_count_intersection(g) == truth
+    assert triangle_count_matrix(g, block=16) == truth
+    assert triangle_count_subgraph(g) == truth
+
+
+@given(_graph_strategy(), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_permutation_invariance(spec, seed):
+    """Relabeling vertices never changes the triangle count."""
+    n, edges = spec
+    src = np.array([e[0] for e in edges], dtype=np.int64)
+    dst = np.array([e[1] for e in edges], dtype=np.int64)
+    g = edges_to_csr(src, dst, n=n)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n).astype(np.int32)
+    g2 = apply_permutation(g, perm)
+    assert triangle_count_intersection(g2) == triangle_count_intersection(g)
+
+
+@given(_graph_strategy())
+@settings(max_examples=25, deadline=None)
+def test_isolated_vertices_invariance(spec):
+    """Padding the vertex set with isolated vertices changes nothing."""
+    n, edges = spec
+    src = np.array([e[0] for e in edges], dtype=np.int64)
+    dst = np.array([e[1] for e in edges], dtype=np.int64)
+    g = edges_to_csr(src, dst, n=n)
+    g_pad = edges_to_csr(src, dst, n=n + 17)
+    assert triangle_count_matrix(g_pad, block=16) == \
+        triangle_count_matrix(g, block=16)
+
+
+@given(_graph_strategy())
+@settings(max_examples=25, deadline=None)
+def test_forward_orientation_halves_edges(spec):
+    """The DAG orientation keeps exactly one direction per undirected edge
+    (the paper's '[filter] removes half of the workload')."""
+    n, edges = spec
+    src = np.array([e[0] for e in edges], dtype=np.int64)
+    dst = np.array([e[1] for e in edges], dtype=np.int64)
+    g = edges_to_csr(src, dst, n=n)
+    dag = orient_forward(g)
+    assert dag.m_directed == g.m_undirected
+    # acyclic by (degree, id) rank: every edge increases the rank
+    d = g.degrees
+    s2 = np.repeat(np.arange(dag.n), dag.degrees)
+    rank_src = d[s2] * (g.n + 1) + s2
+    rank_dst = d[dag.col_idx] * (g.n + 1) + dag.col_idx
+    assert (rank_src < rank_dst).all()

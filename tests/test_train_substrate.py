@@ -1,0 +1,146 @@
+"""Optimizer / microbatching / data / checkpoint / compression / listing."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import get_model, get_reduced_config
+from repro.train.checkpoint import (
+    latest_step, restore_checkpoint, save_checkpoint,
+)
+from repro.train.compression import compress_decompress, ef_init
+from repro.train.data import SyntheticDataConfig, SyntheticDataset, make_batch
+from repro.train.elastic import ElasticTrainer, rescale_microbatches
+from repro.train.optimizer import AdamWConfig, adamw_init, wsd_schedule
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def test_wsd_schedule_phases():
+    cfg = AdamWConfig(peak_lr=1.0, warmup_steps=10, stable_steps=100,
+                      decay_steps=10)
+    assert float(wsd_schedule(jnp.asarray(5), cfg)) == pytest.approx(0.5)
+    assert float(wsd_schedule(jnp.asarray(50), cfg)) == pytest.approx(1.0)
+    assert float(wsd_schedule(jnp.asarray(120), cfg)) == pytest.approx(0.01)
+
+
+def test_microbatch_grad_parity():
+    """Strided microbatch accumulation == single-batch gradients."""
+    cfg = get_reduced_config("gemma2-2b")
+    model = get_model(cfg)
+    opt_cfg = AdamWConfig(peak_lr=0.0, warmup_steps=1, weight_decay=0.0,
+                          moment_dtype=jnp.float32)
+    params, opt = init_train_state(model, cfg, opt_cfg, jax.random.key(0),
+                                   dtype=jnp.float32)
+    batch = {k: jnp.asarray(v) for k, v in make_batch(
+        cfg, SyntheticDataConfig(8, 17), 0).items()}
+    s1 = jax.jit(make_train_step(model, cfg, opt_cfg, microbatches=1))
+    s4 = jax.jit(make_train_step(model, cfg, opt_cfg, microbatches=4))
+    _, _, m1 = s1(params, opt, batch)
+    _, _, m4 = s4(params, opt, batch)
+    assert float(m1["xent"]) == pytest.approx(float(m4["xent"]), rel=1e-5)
+    assert float(m1["grad_norm"]) == pytest.approx(float(m4["grad_norm"]),
+                                                   rel=1e-3)
+
+
+def test_loss_decreases():
+    cfg = get_reduced_config("minicpm-2b")
+    model = get_model(cfg)
+    opt_cfg = AdamWConfig(peak_lr=3e-3, warmup_steps=2, stable_steps=50,
+                          decay_steps=5, moment_dtype=jnp.float32)
+    params, opt = init_train_state(model, cfg, opt_cfg, jax.random.key(0),
+                                   dtype=jnp.float32)
+    step = jax.jit(make_train_step(model, cfg, opt_cfg, microbatches=1))
+    losses = []
+    for i in range(10):
+        batch = {k: jnp.asarray(v) for k, v in make_batch(
+            cfg, SyntheticDataConfig(4, 17), i).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert min(losses[5:]) < losses[0]
+
+
+def test_data_determinism_and_seek():
+    cfg = get_reduced_config("gemma2-2b")
+    dc = SyntheticDataConfig(4, 33, seed=7)
+    ds1 = SyntheticDataset(cfg, dc)
+    b0, b1 = next(ds1), next(ds1)
+    ds2 = SyntheticDataset(cfg, dc)
+    ds2.seek(1)
+    np.testing.assert_array_equal(next(ds2)["tokens"], b1["tokens"])
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_checkpoint_roundtrip_gc_and_resume():
+    cfg = get_reduced_config("mamba2-780m")
+    model = get_model(cfg)
+    opt_cfg = AdamWConfig(moment_dtype=jnp.float32)
+    params, opt = init_train_state(model, cfg, opt_cfg, jax.random.key(0),
+                                   dtype=jnp.float32)
+    state = {"params": params, "opt": opt}
+    with tempfile.TemporaryDirectory() as d:
+        for s in (10, 20, 30, 40):
+            save_checkpoint(d, s, state, extra={"next_step": s + 1}, keep=2)
+        assert latest_step(d) == 40
+        assert sorted(os.listdir(d)) == ["step_30", "step_40"]  # GC kept 2
+        restored, extra = restore_checkpoint(d, 40, state)
+        assert extra["next_step"] == 41
+        for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # elastic shell resumes from latest
+        et = ElasticTrainer(ckpt_dir=d)
+        resumed, start = et.resume_or_init(lambda: state)
+        assert start == 41
+
+
+def test_rescale_microbatches():
+    assert rescale_microbatches(8, 32, 16) == 16  # half the dp → double micro
+    assert rescale_microbatches(8, 16, 32) == 4
+
+
+def test_compression_error_feedback():
+    """Quantization error must be carried, not lost: over many steps the
+    mean dequantized gradient converges to the true mean."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(256).astype(np.float32) * 1e-3)
+    ef = ef_init({"w": g_true})["w"]
+    total = jnp.zeros_like(g_true)
+    for _ in range(50):
+        deq, ef = compress_decompress({"w": g_true}, {"w": ef})
+        total = total + deq["w"]
+    np.testing.assert_allclose(np.asarray(total / 50), np.asarray(g_true),
+                               atol=1e-6)
+
+
+def test_listing_and_truss():
+    from repro.core import (clustering_coefficients, k_truss, transitivity,
+                            enumerate_triangles)
+    from repro.graphs import complete_graph, grid_graph
+
+    k4 = complete_graph(4)
+    assert enumerate_triangles(k4).shape == (4, 3)
+    np.testing.assert_allclose(clustering_coefficients(k4), np.ones(4))
+    assert transitivity(k4) == pytest.approx(1.0)
+    # k-truss of K4 at k=4: every edge in 2 triangles ⇒ survives; k=5 empty
+    assert k_truss(k4, 4).m_undirected == 6
+    assert k_truss(k4, 5).m_undirected == 0
+    g = grid_graph(8, seed=0)
+    assert k_truss(g, 3).m_undirected <= g.m_undirected
+
+
+def test_labeled_subgraph_match():
+    from repro.core import subgraph_match_triangle
+    from repro.graphs.formats import edges_to_csr
+
+    # triangle 0-1-2 labeled (0,1,2) + triangle 3-4-5 labeled (0,0,0)
+    g = edges_to_csr(np.array([0, 1, 2, 3, 4, 5]),
+                     np.array([1, 2, 0, 4, 5, 3]), n=6)
+    labels = np.array([0, 1, 2, 0, 0, 0])
+    # ordered embeddings of labeled triangle (0,1,2): exactly one per
+    # orientation of the 0-1 edge = 1 (u=0,v=1,w=2)
+    assert subgraph_match_triangle(g, labels, (0, 1, 2)) == 1
+    assert subgraph_match_triangle(g, labels, (0, 0, 0)) == 6  # all perms
+    assert subgraph_match_triangle(g, labels, (2, 2, 2)) == 0
