@@ -1,46 +1,53 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows:
+Prints ``name,prep_us,count_us,derived`` CSV rows:
 
+  prep_us    — one-time cost per cell: host plan construction (orientation,
+               bucketing, tile scheduling), device upload, and the first
+               count (which traces + compiles); what the engine amortizes
+  count_us   — device replay of a cached ``TrianglePlan`` (best of N); the
+               kernel time the paper's figures compare
   table1_*   — dataset statistics (derived = exact triangle count)
-  fig5_*     — wall-clock per TC method per dataset, normalized to the
-               sequential CPU baseline (derived = speedup ×; the paper's
-               Fig. 5 bar chart)
+  fig5_*     — per-method wall clock per dataset, normalized to the
+               sequential CPU baseline (derived = count-time speedup ×; the
+               paper's Fig. 5 bar chart)
   fig6_*     — runtime vs Σd² scaling for intersection- and matrix-based TC
-               (derived = fitted log-log slope; the paper's Fig. 6 shows
-               slope ≈ 1) plus the leading-constant ratio matrix/intersection
-               (paper: ~20×)
+               (derived = fitted log-log slope of count time; the paper's
+               Fig. 6 shows slope ≈ 1) plus the leading-constant ratio
+               matrix/intersection (paper: ~20×)
 
 CPU-only proxy: all methods run their jnp backends on the host; relative
 orderings (intersection-filtered fastest, matrix slowest with a large
 constant, SM wins from pruning on mesh-like graphs) are the reproducible
-claims — see EXPERIMENTS.md §Paper-validation.
+claims — see README.md §Experiments.
+
+``--smoke`` runs a reduced fig5 subset on the tiny fixtures (the CI smoke
+job); every fig5 cell asserts exact agreement with the scipy oracle, so a
+correctness regression fails the process.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 
 from repro.graphs import DATASETS, load_dataset
-from repro.core import (
-    triangle_count_intersection, triangle_count_matrix,
-    triangle_count_subgraph, triangle_count_scipy,
-)
+from repro.core import plan_triangle_count, triangle_count_scipy
 from repro.graphs.generators import rmat_graph
 from repro.configs.paper import DATASETS_FIG5, FIG6_SCALES, FIG6_EDGE_FACTOR
 
 _ROWS = []
 
 
-def _emit(name: str, us: float, derived) -> None:
-    row = f"{name},{us:.1f},{derived}"
+def _emit(name: str, prep_us: float, count_us: float, derived) -> None:
+    row = f"{name},{prep_us:.1f},{count_us:.1f},{derived}"
     _ROWS.append(row)
     print(row, flush=True)
 
 
-def _time(fn, *, warmup: int = 1, iters: int = 1) -> float:
+def _time(fn, *, warmup: int = 1, iters: int = 2) -> float:
     for _ in range(warmup):
         fn()
     best = float("inf")
@@ -51,86 +58,126 @@ def _time(fn, *, warmup: int = 1, iters: int = 1) -> float:
     return best * 1e6
 
 
-def table1() -> None:
-    for name in DATASETS_FIG5:
+# method -> (engine algorithm, plan kwargs)
+_PLAN_METHODS = {
+    "tc-intersection-filtered": ("intersection", dict(variant="filtered")),
+    "tc-intersection-full": ("intersection", dict(variant="full")),
+    "tc-matrix": ("matrix", dict(block="auto")),
+    "tc-SM": ("subgraph", dict()),
+}
+
+
+def _timed_plan(g, meth: str, **overrides):
+    """Build the plan AND run its first count for one fig5/fig6 cell, so
+    prep_us covers the whole one-time cost: host prep, device upload, and
+    the first trace+compile. Returns (plan, first_count, prep_us)."""
+    algorithm, kwargs = _PLAN_METHODS[meth]
+    kwargs = {**kwargs, **overrides}
+    t0 = time.perf_counter()
+    plan = plan_triangle_count(g, algorithm, **kwargs)
+    first = plan.count()
+    prep_us = (time.perf_counter() - t0) * 1e6
+    return plan, first, prep_us
+
+
+def table1(datasets) -> None:
+    for name in datasets:
         g = load_dataset(name)
         t0 = time.perf_counter()
         tri = triangle_count_scipy(g)
         us = (time.perf_counter() - t0) * 1e6
         _emit(f"table1_{name}_v{g.n}_e{g.m_undirected}_d{g.max_degree}"
-              f"_{DATASETS[name]['type']}", us, tri)
-
-
-_METHODS = {
-    "tc-intersection-filtered": lambda g: triangle_count_intersection(
-        g, variant="filtered"),
-    "tc-intersection-full": lambda g: triangle_count_intersection(
-        g, variant="full"),
-    "tc-matrix": lambda g: triangle_count_matrix(g, block="auto"),
-    "tc-SM": lambda g: triangle_count_subgraph(g),
-    "cpu-baseline": triangle_count_scipy,
-}
+              f"_{DATASETS[name]['type']}", 0.0, us, tri)
 
 
 # single-core budget policy: the filtered method and SM run everywhere;
 # the quadratic full-list ablation runs under 150k edges; the matrix method
 # runs on the datasets whose tile schedules fit the budget (measured) —
-# skips are explicit rows.
+# skips are explicit rows. The smoke subset lifts both limits (tiny graphs).
 _FULL_LIMIT = 150_000  # undirected edges
 _MATRIX_SETS = {"coauthors-like", "road-like"}
 
 
-def fig5() -> None:
-    for name in DATASETS_FIG5:
+def fig5(datasets, *, budget: bool = True, iters: int = 2) -> None:
+    for name in datasets:
         g = load_dataset(name)
         truth = triangle_count_scipy(g)
-        base_us = _time(lambda: triangle_count_scipy(g))
-        _emit(f"fig5_{name}_cpu-baseline", base_us, "1.00x")
+        base_us = _time(lambda: triangle_count_scipy(g), iters=iters)
+        _emit(f"fig5_{name}_cpu-baseline", 0.0, base_us, "1.00x")
         for meth in ("tc-intersection-filtered", "tc-intersection-full",
                      "tc-matrix", "tc-SM"):
-            if (meth == "tc-intersection-full"
+            if (budget and meth == "tc-intersection-full"
                     and g.m_undirected > _FULL_LIMIT):
-                _emit(f"fig5_{name}_{meth}", 0.0, "skipped(budget)")
+                _emit(f"fig5_{name}_{meth}", 0.0, 0.0, "skipped(budget)")
                 continue
-            if meth == "tc-matrix" and name not in _MATRIX_SETS:
-                _emit(f"fig5_{name}_{meth}", 0.0, "skipped(budget)")
+            if budget and meth == "tc-matrix" and name not in _MATRIX_SETS:
+                _emit(f"fig5_{name}_{meth}", 0.0, 0.0, "skipped(budget)")
                 continue
-            fn = _METHODS[meth]
-            assert fn(g) == truth, (name, meth)
-            us = _time(lambda: fn(g))
-            _emit(f"fig5_{name}_{meth}", us, f"{base_us / us:.2f}x")
+            plan, first, prep_us = _timed_plan(g, meth)
+            assert first == truth, (name, meth)
+            count_us = _time(plan.count, iters=iters)
+            _emit(f"fig5_{name}_{meth}", prep_us, count_us,
+                  f"{base_us / count_us:.2f}x")
 
 
-def fig6() -> None:
+def fig6(scales, *, iters: int = 2) -> None:
     ssds, t_int, t_mat = [], [], []
-    for scale in FIG6_SCALES:
+    for scale in scales:
         g = rmat_graph(scale, FIG6_EDGE_FACTOR, seed=scale)
         ssd = g.sum_square_degrees
-        us_i = _time(lambda: triangle_count_intersection(g))
-        us_m = _time(lambda: triangle_count_matrix(g, block=128))
+        # fixed block=128 so every scale times the same tile size and the
+        # slope fit stays comparable (choose_block could flip mid-sweep)
+        plan_i, _, prep_i = _timed_plan(g, "tc-intersection-filtered")
+        plan_m, _, prep_m = _timed_plan(g, "tc-matrix", block=128)
+        us_i = _time(plan_i.count, iters=iters)
+        us_m = _time(plan_m.count, iters=iters)
         ssds.append(ssd)
         t_int.append(us_i)
         t_mat.append(us_m)
-        _emit(f"fig6_rmat{scale}_ssd{ssd}_intersection", us_i,
+        _emit(f"fig6_rmat{scale}_ssd{ssd}_intersection", prep_i, us_i,
               f"ssd={ssd}")
-        _emit(f"fig6_rmat{scale}_ssd{ssd}_matrix", us_m, f"ssd={ssd}")
-    # log-log slope fits (paper: slope ≈ 1 for both)
+        _emit(f"fig6_rmat{scale}_ssd{ssd}_matrix", prep_m, us_m, f"ssd={ssd}")
+    # log-log slope fits on count time (paper: slope ≈ 1 for both)
     lx = np.log(np.asarray(ssds, dtype=np.float64))
     for label, ts in (("intersection", t_int), ("matrix", t_mat)):
         ly = np.log(np.asarray(ts, dtype=np.float64))
         slope, intercept = np.polyfit(lx, ly, 1)
-        _emit(f"fig6_slope_{label}", float(np.mean(ts)),
+        _emit(f"fig6_slope_{label}", 0.0, float(np.mean(ts)),
               f"slope={slope:.3f}")
     # leading-constant ratio at the largest size (paper: ~20x)
-    _emit("fig6_constant_ratio_matrix_over_intersection",
+    _emit("fig6_constant_ratio_matrix_over_intersection", 0.0,
           t_mat[-1], f"{t_mat[-1] / t_int[-1]:.1f}x")
 
 
+_SMOKE_DATASETS = ["tiny-rmat", "tiny-grid"]
+_SMOKE_SCALES = [7, 8]
+
+
 def main() -> None:
-    print("name,us_per_call,derived")
-    table1()
-    fig5()
-    fig6()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--figures", default=None,
+                    help="comma list from {table1,fig5,fig6}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced fig5 subset on tiny fixtures (CI job)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        figures = (args.figures or "table1,fig5").split(",")
+        datasets, scales, budget, iters = _SMOKE_DATASETS, _SMOKE_SCALES, False, 1
+    else:
+        figures = (args.figures or "table1,fig5,fig6").split(",")
+        datasets, scales, budget, iters = DATASETS_FIG5, FIG6_SCALES, True, 2
+    unknown = set(figures) - {"table1", "fig5", "fig6"}
+    if unknown:
+        ap.error(f"unknown figures: {sorted(unknown)}")
+
+    print("name,prep_us,count_us,derived")
+    if "table1" in figures:
+        table1(datasets)
+    if "fig5" in figures:
+        fig5(datasets, budget=budget, iters=iters)
+    if "fig6" in figures:
+        fig6(scales, iters=iters)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 """Core library: the paper's three exact triangle-counting formulations.
 
 Public API:
+    plan_triangle_count / TrianglePlan — plan/execute engine: host prep once,
+        device-resident buffers + cached compiled kernels, replayable count()
     triangle_count_intersection  — forward algorithm, bucketed batch intersection
     triangle_count_matrix        — masked block-SpGEMM (MXU tile schedule)
     triangle_count_subgraph      — filter(2-core) + join subgraph matching
@@ -9,6 +11,12 @@ Public API:
     triangle_count_*_distributed — shard_map multi-pod variants
 """
 
+from repro.core.engine import (
+    TrianglePlan,
+    plan_triangle_count,
+    executable_cache_info,
+    clear_executable_cache,
+)
 from repro.core.tc_intersection import (
     triangle_count_intersection,
     prepare_intersection_buckets,
@@ -38,6 +46,10 @@ from repro.core.oracle import (
 )
 
 __all__ = [
+    "TrianglePlan",
+    "plan_triangle_count",
+    "executable_cache_info",
+    "clear_executable_cache",
     "triangle_count_intersection",
     "prepare_intersection_buckets",
     "triangle_count_matrix",

@@ -27,11 +27,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax ≥ 0.6 exports shard_map at top level
+    from jax import shard_map
+except ImportError:  # older jax ships it under experimental
+    from jax.experimental.shard_map import shard_map
 
 from repro.graphs.formats import Graph
-from repro.core.tc_matrix import build_tile_schedule
-from repro.core.tc_intersection import prepare_intersection_buckets
+from repro.core.engine import build_tile_schedule, prepare_intersection_buckets
 
 __all__ = [
     "triangle_count_matrix_distributed",

@@ -11,66 +11,28 @@ Pipeline (host numpy prep → JAX compute):
   2. Degree-class bucketing — the TPU replacement for TwoSmall/TwoLarge
      dynamic grouping: each bucket is a statically-shaped (E_b, W_b) problem.
   3. COMPUTE_INTERSECTION — per bucket, one batched intersection kernel call
-     (Pallas or jnp binary-probe), then a single reduction.
+     fused with its reduction in a single traced computation.
 
 ``variant="full"`` reproduces the paper's tc-intersection-full ablation
 (intersect over ALL directed edges with full neighbor lists; each triangle is
 then found 6×), so benchmarks can measure exactly what the filtering buys.
+
+This module is a thin wrapper over the plan/execute engine
+(:mod:`repro.core.engine`): one-shot counting builds a ``TrianglePlan`` and
+executes it once. Hold the plan (``plan_triangle_count``) to amortize the
+host stage across repeated counts.
 """
 
 from __future__ import annotations
 
-from typing import Optional
-
-import numpy as np
-import jax.numpy as jnp
-
-from repro.graphs.formats import (
-    Graph,
-    bucket_edges_by_degree,
-    csr_to_padded_neighbors,
-    orient_forward,
+from repro.graphs.formats import Graph
+from repro.core.engine import (
+    DEFAULT_WIDTHS,
+    plan_triangle_count,
+    prepare_intersection_buckets,  # re-export (prep now lives in the engine)
 )
-from repro.kernels.intersect.ops import intersect_counts
 
 __all__ = ["triangle_count_intersection", "prepare_intersection_buckets"]
-
-
-def prepare_intersection_buckets(
-    g: Graph,
-    variant: str = "filtered",
-    widths=(8, 32, 128, 512),
-):
-    """Host-side stage: orientation + bucketing + padded gathering.
-
-    Returns a list of dicts {u_lists, v_lists} of jnp-ready numpy arrays,
-    one per degree-class bucket. Sentinels: u rows pad with n, v rows with
-    n+1 (never equal ⇒ padding contributes zero matches).
-    """
-    if variant == "filtered":
-        dag = orient_forward(g)
-        src = np.repeat(np.arange(dag.n, dtype=np.int32), dag.degrees)
-        dst = dag.col_idx
-        deg = dag.degrees
-        base = dag
-    elif variant == "full":
-        src = np.repeat(np.arange(g.n, dtype=np.int32), g.degrees)
-        dst = g.col_idx
-        deg = g.degrees
-        base = g
-    else:
-        raise ValueError(variant)
-
-    buckets = bucket_edges_by_degree(src, dst, deg, widths=widths)
-    out = []
-    for b in buckets:
-        w = b["width"]
-        nbrs = csr_to_padded_neighbors(base, pad_to=max(w, 1), fill=g.n)
-        u_lists = nbrs[b["src"]]
-        v_lists = nbrs[b["dst"]].copy()
-        v_lists[v_lists == g.n] = g.n + 1  # disjoint sentinel
-        out.append(dict(u_lists=u_lists, v_lists=v_lists, width=w))
-    return out
 
 
 def triangle_count_intersection(
@@ -79,7 +41,7 @@ def triangle_count_intersection(
     variant: str = "filtered",
     backend: str = "jnp",
     interpret: bool = True,
-    widths=(8, 32, 128, 512),
+    widths=DEFAULT_WIDTHS,
 ) -> int:
     """Exact triangle count via batched set intersection.
 
@@ -87,17 +49,8 @@ def triangle_count_intersection(
     variant="full":     Green-et-al.-style full edge list (counted 6×).
     backend: "jnp" (binary probe), "pallas" (TPU kernel), "ref" (oracle).
     """
-    buckets = prepare_intersection_buckets(g, variant=variant, widths=widths)
-    total = 0
-    for b in buckets:
-        counts = intersect_counts(
-            jnp.asarray(b["u_lists"]),
-            jnp.asarray(b["v_lists"]),
-            backend=backend,
-            interpret=interpret,
-        )
-        total += int(jnp.sum(counts))
-    if variant == "full":
-        assert total % 6 == 0, total
-        return total // 6
-    return total
+    plan = plan_triangle_count(
+        g, "intersection", variant=variant, backend=backend,
+        interpret=interpret, widths=widths,
+    )
+    return plan.count()

@@ -8,7 +8,8 @@ Algorithm 3 of the paper:
 
 The paper calls cuSPARSE csrgemm and shows the unmasked SpGEMM is the
 bottleneck (intermediate B hits global memory; multiplications run where A is
-known zero). Here the host builds a *tile schedule* instead:
+known zero). Here the host builds a *tile schedule* instead
+(:func:`repro.core.engine.build_tile_schedule`):
 
   * A (permuted) is tiled into dense 128×128 blocks (BSR); only nonzero tiles
     exist.
@@ -24,98 +25,23 @@ wedge, which lands in the strict upper triangle after the degree permutation).
 
 Degenerate diagonal tiles (I == J) carry both L and U nonzeros; they are
 handled naturally because L/U tiles are built from the strict parts.
+
+This module is a thin wrapper over the plan/execute engine: one-shot counting
+builds a ``TrianglePlan`` (host tile schedule → device-resident tiles +
+compiled fused kernel) and executes it once. Hold the plan to amortize the
+schedule across repeated counts.
 """
 
 from __future__ import annotations
 
-from typing import Tuple
-
-import numpy as np
-import jax.numpy as jnp
-
-from repro.graphs.formats import (
-    BlockSparse,
-    Graph,
-    apply_permutation,
-    degree_order_permutation,
-    to_block_sparse,
+from repro.graphs.formats import Graph
+from repro.core.engine import (
+    build_tile_schedule,  # re-export (prep now lives in the engine)
+    choose_block,  # re-export
+    plan_triangle_count,
 )
-from repro.kernels.masked_spgemm.ops import masked_spgemm_counts
 
 __all__ = ["triangle_count_matrix", "build_tile_schedule", "choose_block"]
-
-
-def choose_block(g: Graph) -> int:
-    """Adaptive tile size (§Perf hillclimb, beyond-paper): degree-permuted
-    scale-free graphs densify the bottom-right tile cluster, so 128 (MXU
-    native) wins; mesh-like graphs (low, uniform degree) never fill tiles —
-    measured 40,000× MXU-flop waste and 25× wall-time regression at 128 vs
-    32 on road-like — so low-avg-degree graphs get small tiles."""
-    avg_deg = 2.0 * g.m_undirected / max(g.n, 1)
-    return 128 if avg_deg >= 8.0 else 32
-
-
-def build_tile_schedule(
-    g: Graph, block: int = 128, permute: bool = True
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray, dict]:
-    """Host scheduler: returns stacked (T,B,B) L/U/A tile triples + stats.
-
-    The returned triples are sorted heavy-first (by block density product) and
-    are the unit of distribution for multi-device TC (core/distributed.py uses
-    a snake round-robin over this order for static load balance — the TPU
-    analogue of merge-path's equal-work splitting).
-    """
-    if permute:
-        perm = degree_order_permutation(g)
-        g = apply_permutation(g, perm)
-    a_bsr = to_block_sparse(g, block=block, part="upper")  # mask: strict upper
-    l_bsr = to_block_sparse(g, block=block, part="lower")
-    u_bsr = to_block_sparse(g, block=block, part="upper")
-
-    # block-row index of L: row -> list of (K, tile_id); block-col index of U
-    l_rows: dict = {}
-    for t in range(l_bsr.num_blocks):
-        l_rows.setdefault(int(l_bsr.block_row[t]), []).append(
-            (int(l_bsr.block_col[t]), t)
-        )
-    u_cols: dict = {}
-    for t in range(u_bsr.num_blocks):
-        u_cols.setdefault(int(u_bsr.block_col[t]), []).append(
-            (int(u_bsr.block_row[t]), t)
-        )
-
-    trip_l, trip_u, trip_a = [], [], []
-    for t in range(a_bsr.num_blocks):
-        bi, bj = int(a_bsr.block_row[t]), int(a_bsr.block_col[t])
-        lk = dict(l_rows.get(bi, ()))
-        uk = dict(u_cols.get(bj, ()))
-        for k in lk.keys() & uk.keys():
-            trip_a.append(t)
-            trip_l.append(lk[k])
-            trip_u.append(uk[k])
-
-    T = len(trip_a)
-    stats = dict(
-        num_triples=T,
-        a_tiles=a_bsr.num_blocks,
-        l_tiles=l_bsr.num_blocks,
-        u_tiles=u_bsr.num_blocks,
-        grid=a_bsr.grid,
-        block=block,
-        tile_flops=2 * T * block**3,
-    )
-    if T == 0:
-        z = np.zeros((0, block, block), dtype=np.float32)
-        return z, z, z, stats
-
-    l_sel = l_bsr.blocks[np.asarray(trip_l)]
-    u_sel = u_bsr.blocks[np.asarray(trip_u)]
-    a_sel = a_bsr.blocks[np.asarray(trip_a)]
-    # heavy-first ordering by nnz(L)·nnz(U) so chunked execution and
-    # round-robin sharding see a monotone work profile
-    work = l_sel.sum(axis=(1, 2)) * u_sel.sum(axis=(1, 2))
-    order = np.argsort(-work, kind="stable")
-    return l_sel[order], u_sel[order], a_sel[order], stats
 
 
 def triangle_count_matrix(
@@ -127,16 +53,8 @@ def triangle_count_matrix(
     interpret: bool = True,
 ) -> int:
     """Exact triangle count via fused masked block-SpGEMM."""
-    if block == "auto":
-        block = choose_block(g)
-    l_sel, u_sel, a_sel, _ = build_tile_schedule(g, block=block, permute=permute)
-    if l_sel.shape[0] == 0:
-        return 0
-    partials = masked_spgemm_counts(
-        jnp.asarray(l_sel),
-        jnp.asarray(u_sel),
-        jnp.asarray(a_sel),
-        backend=backend,
+    plan = plan_triangle_count(
+        g, "matrix", block=block, permute=permute, backend=backend,
         interpret=interpret,
     )
-    return int(round(float(jnp.sum(partials))))
+    return plan.count()

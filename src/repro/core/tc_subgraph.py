@@ -5,9 +5,10 @@ FILTER (Gunrock Advance/Filter analogue → JAX):
   Candidate vertices must satisfy the triangle query's degree (≥2) and label
   constraints. The paper iterates filter+reconstruct "for a few iterations to
   prune out more edges"; taken to its fixed point that is exactly a 2-core
-  peel, which we run as a `lax.while_loop` over a static edge list (no dynamic
-  shapes; `segment_sum` plays the role of the Advance frontier). This is what
-  wins on mesh-like graphs — leaf cascades collapse.
+  peel, which runs as a `lax.while_loop` over a static edge list (no dynamic
+  shapes; `segment_sum` plays the role of the Advance frontier) — see
+  :func:`repro.core.engine.peel_to_two_core`. This is what wins on mesh-like
+  graphs — leaf cascades collapse.
 
 RECONSTRUCT: the surviving vertex mask reforms the induced subgraph on the
   host (the paper's 'reconstructing the data graph updates node degree and
@@ -19,63 +20,32 @@ JOIN: candidate edges are joined under the triangle's intersection rule —
   reduces to verification-by-intersection). The join produces *embeddings*
   (all 6 automorphisms per triangle, as a real subgraph matcher must);
   ``triangle_count_subgraph`` divides by |Aut(K₃)| = 6.
+
+The unlabeled count is a thin wrapper over the plan/execute engine: filter +
+reconstruct + bucket setup run once at plan time, and the join replays on
+device. ``subgraph_match_triangle`` handles labeled queries, which carry
+per-query candidate-edge masks and so stay one-shot.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.graphs.formats import Graph, induced_subgraph
-from repro.core.tc_intersection import triangle_count_intersection
+from repro.core.engine import (
+    _two_core_peel,
+    peel_to_two_core,  # re-export (prep now lives in the engine)
+    plan_triangle_count,
+)
 
 __all__ = [
     "peel_to_two_core",
     "triangle_count_subgraph",
     "subgraph_match_triangle",
 ]
-
-
-@functools.partial(jax.jit, static_argnames=("n",))
-def _two_core_peel(src: jnp.ndarray, dst: jnp.ndarray, init_alive: jnp.ndarray, *, n: int):
-    """Fixed-point peel: drop vertices whose alive-degree < 2."""
-
-    def cond(state):
-        alive, changed = state
-        return changed
-
-    def body(state):
-        alive, _ = state
-        contrib = (alive[src] & alive[dst]).astype(jnp.int32)
-        deg = jax.ops.segment_sum(contrib, src, num_segments=n)
-        new_alive = alive & (deg >= 2)
-        return new_alive, jnp.any(new_alive != alive)
-
-    alive, _ = jax.lax.while_loop(cond, body, (init_alive, jnp.array(True)))
-    return alive
-
-
-def peel_to_two_core(g: Graph, labels: Optional[np.ndarray] = None,
-                     query_label: Optional[int] = None) -> np.ndarray:
-    """INITIALIZE_CANDIDATE_SET + iterated filter, to fixed point.
-
-    Returns a bool (n,) candidate-vertex mask. With labels, vertices whose
-    label cannot match any query vertex are pruned before the degree peel.
-    """
-    src = np.repeat(np.arange(g.n, dtype=np.int32), g.degrees)
-    dst = g.col_idx
-    init = np.ones(g.n, dtype=bool)
-    if labels is not None and query_label is not None:
-        init &= np.asarray(labels) == query_label
-    if g.m_directed == 0:
-        return np.zeros(g.n, dtype=bool)
-    alive = _two_core_peel(jnp.asarray(src), jnp.asarray(dst),
-                           jnp.asarray(init), n=g.n)
-    return np.asarray(alive)
 
 
 def triangle_count_subgraph(
@@ -86,23 +56,20 @@ def triangle_count_subgraph(
     return_stats: bool = False,
 ):
     """Exact TC via filter(2-core-peel) + reform + join-by-intersection."""
-    alive = peel_to_two_core(g)
-    sub, _ = induced_subgraph(g, alive)
-    # join on the pruned graph; forward-filtered intersection counts each
-    # triangle once (embeddings = 6 × that)
-    count = triangle_count_intersection(
-        sub, variant="filtered", backend=backend, interpret=interpret
+    plan = plan_triangle_count(
+        g, "subgraph", backend=backend, interpret=interpret
     )
     if return_stats:
+        count, meta = plan.count_with_stats()
         stats = dict(
-            vertices_pruned=int(g.n - alive.sum()),
-            prune_fraction=float(1.0 - alive.sum() / max(g.n, 1)),
-            edges_after=sub.m_undirected,
-            edges_before=g.m_undirected,
-            num_embeddings=6 * count,
+            vertices_pruned=meta["vertices_pruned"],
+            prune_fraction=meta["prune_fraction"],
+            edges_after=meta["edges_after"],
+            edges_before=meta["edges_before"],
+            num_embeddings=meta["num_embeddings"],
         )
         return count, stats
-    return count
+    return plan.count()
 
 
 def subgraph_match_triangle(
@@ -142,7 +109,7 @@ def subgraph_match_triangle(
     if not e_keep.any():
         return 0
     from repro.graphs.formats import bucket_edges_by_degree, csr_to_padded_neighbors
-    from repro.kernels.intersect.ops import intersect_counts
+    from repro.core.engine import get_executable
 
     # restrict intersected neighbor ids to label-q2 vertices by remapping
     # non-q2 neighbors to a sentinel on the u side only (so they never match)
@@ -156,9 +123,8 @@ def subgraph_match_triangle(
         valid = (u_lists < sub.n) & q2_ok[np.clip(u_lists, 0, sub.n - 1)]
         u_lists[~valid] = sub.n
         v_lists[v_lists == sub.n] = sub.n + 1
-        counts = intersect_counts(
-            jnp.asarray(u_lists), jnp.asarray(v_lists),
-            backend=backend, interpret=interpret,
+        run = get_executable(
+            "intersection", backend, interpret, tuple(u_lists.shape)
         )
-        total += int(jnp.sum(counts))
+        total += int(run(jnp.asarray(u_lists), jnp.asarray(v_lists)))
     return total

@@ -161,7 +161,10 @@ def _lower_cell_inner(arch, shape, mesh, cfg, cell, chips, rec, model):
 def lower_tc(mesh, *, tiles: int = 8192, block: int = 128) -> dict:
     """Dry-run the paper core: distributed masked block-SpGEMM TC on the
     production mesh (synthetic tile schedule, ShapeDtypeStruct only)."""
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:  # older jax ships it under experimental
+        from jax.experimental.shard_map import shard_map
 
     chips = mesh.devices.size
     axes = tuple(mesh.axis_names)

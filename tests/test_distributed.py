@@ -70,14 +70,18 @@ out["param_parity"] = all(
 # compressed psum on a real mesh axis
 from repro.train.compression import ef_psum, ef_init
 from jax.sharding import PartitionSpec as P
+try:
+    from jax import shard_map
+except ImportError:  # older jax ships it under experimental
+    from jax.experimental.shard_map import shard_map
 
 def worker(g):
     deq, _ = ef_psum({"w": g}, ef_init({"w": g}), "data")
     return deq["w"]
 
 gs = jnp.arange(32, dtype=jnp.float32).reshape(8, 4) * 1e-3
-got = jax.jit(jax.shard_map(worker, mesh=mesh1, in_specs=P("data"),
-                            out_specs=P("data")))(gs)
+got = jax.jit(shard_map(worker, mesh=mesh1, in_specs=P("data"),
+                        out_specs=P("data")))(gs)
 want = gs.sum(axis=0, keepdims=True)
 out["ef_psum"] = bool(np.allclose(np.asarray(got[0]), np.asarray(want[0]),
                                   atol=2e-3))

@@ -1,6 +1,10 @@
 """Hypothesis property tests on the system's invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error
+
 from hypothesis import given, settings, strategies as st
 
 from repro.graphs.formats import edges_to_csr, apply_permutation, orient_forward
