@@ -15,15 +15,24 @@ Prints ``name,prep_us,count_us,derived`` CSV rows:
                (derived = fitted log-log slope of count time; the paper's
                Fig. 6 shows slope ≈ 1) plus the leading-constant ratio
                matrix/intersection (paper: ~20×)
+  strat_*    — beyond-paper: per-degree-bucket set-intersection strategy ×
+               width sweep (broadcast / probe / bitmap; see
+               repro.kernels.intersect.ops). Every cell asserts exact
+               agreement with the per-bucket oracle, and each bucket's rows
+               record which strategy ``strategy="auto"`` would pick
+               (derived = ``edges=E;auto=<choice>``). Cells outside the
+               single-core budget emit explicit skipped rows.
 
 CPU-only proxy: all methods run their jnp backends on the host; relative
 orderings (intersection-filtered fastest, matrix slowest with a large
 constant, SM wins from pruning on mesh-like graphs) are the reproducible
 claims — see README.md §Experiments.
 
-``--smoke`` runs a reduced fig5 subset on the tiny fixtures (the CI smoke
-job); every fig5 cell asserts exact agreement with the scipy oracle, so a
-correctness regression fails the process.
+``--smoke`` swaps the dataset list for the tiny fixtures and drops the budget
+gates (the CI smoke job runs the default table1+fig5 subset; any
+``--figures`` selection, e.g. ``--figures strat --smoke``, honors it). Every
+fig5 and strat cell asserts exact agreement with its oracle, so a correctness
+regression fails the process. See docs/BENCHMARKS.md for the full contract.
 """
 
 from __future__ import annotations
@@ -32,9 +41,14 @@ import argparse
 import time
 
 import numpy as np
+import jax.numpy as jnp
 
 from repro.graphs import DATASETS, load_dataset
 from repro.core import plan_triangle_count, triangle_count_scipy
+from repro.core.engine import get_executable, prepare_intersection_buckets
+from repro.kernels.intersect import (
+    STRATEGIES, intersect_counts_probe, intersect_counts_ref, resolve_strategy,
+)
 from repro.graphs.generators import rmat_graph
 from repro.configs.paper import DATASETS_FIG5, FIG6_SCALES, FIG6_EDGE_FACTOR
 
@@ -149,6 +163,71 @@ def fig6(scales, *, iters: int = 2) -> None:
           t_mat[-1], f"{t_mat[-1] / t_int[-1]:.1f}x")
 
 
+# strat sweep budget policy (single-core): the O(E·W²) broadcast core only
+# runs on buckets under the compare budget, and bitmap only when the packed
+# bitmap stays small; skips are explicit rows, mirroring the fig5 policy
+_STRAT_BROADCAST_BUDGET = 1 << 30  # E·W² compares per bucket
+_STRAT_BITMAP_MAX_BITS = 4096
+
+
+def _bucket_oracle(u: np.ndarray, v: np.ndarray) -> int:
+    """Per-bucket reference total: the chunked broadcast-compare oracle when
+    the bucket fits the compare budget, else the probe path (whose global sum
+    the caller anchors against the scipy oracle)."""
+    e, w = u.shape
+    uj, vj = jnp.asarray(u), jnp.asarray(v)
+    if e * w * w <= _STRAT_BROADCAST_BUDGET:
+        total, chunk = 0, max(1, (1 << 24) // (w * w))
+        for s in range(0, e, chunk):
+            total += int(jnp.sum(intersect_counts_ref(uj[s:s + chunk],
+                                                      vj[s:s + chunk])))
+        return total
+    return int(jnp.sum(intersect_counts_probe(uj, vj)))
+
+
+def strat(datasets, *, iters: int = 2) -> None:
+    """Per-bucket strategy × width sweep on the filtered intersection lane.
+
+    One row per (dataset, bucket width, strategy) timing the engine's cached
+    jnp executable for that (strategy, shape); every executed cell asserts
+    exact agreement with the per-bucket oracle, and the per-dataset bucket
+    totals are anchored against the scipy oracle.
+    """
+    for name in datasets:
+        g = load_dataset(name)
+        truth = triangle_count_scipy(g)
+        buckets = prepare_intersection_buckets(g, variant="filtered")
+        id_range = g.n + 2  # real ids + the n / n+1 in-row sentinels
+        refs = [_bucket_oracle(b["u_lists"], b["v_lists"]) for b in buckets]
+        assert sum(refs) == truth, (name, sum(refs), truth)
+        for b, ref_total in zip(buckets, refs):
+            w = b["width"]
+            e = b["u_lists"].shape[0]
+            auto_choice, _ = resolve_strategy(w, id_range)
+            u, v = jnp.asarray(b["u_lists"]), jnp.asarray(b["v_lists"])
+            derived = f"edges={e};auto={auto_choice}"
+            for s in STRATEGIES:
+                row = f"strat_{name}_w{w}_{s}"
+                if s == "broadcast" and e * w * w > _STRAT_BROADCAST_BUDGET:
+                    _emit(row, 0.0, 0.0, "skipped(budget)")
+                    continue
+                if s == "bitmap":
+                    _, bits = resolve_strategy(w, id_range, strategy="bitmap")
+                    if bits > _STRAT_BITMAP_MAX_BITS:
+                        _emit(row, 0.0, 0.0, "skipped(id-range)")
+                        continue
+                else:
+                    bits = None
+                t0 = time.perf_counter()
+                fn = get_executable("intersection", "jnp", True, u.shape,
+                                    strategy=s, bitmap_bits=bits)
+                first = int(fn(u, v))
+                prep_us = (time.perf_counter() - t0) * 1e6
+                assert first == ref_total, (name, w, s, first, ref_total)
+                count_us = _time(lambda: int(fn(u, v)), iters=iters)
+                _emit(row, prep_us, count_us, derived)
+
+
 _SMOKE_DATASETS = ["tiny-rmat", "tiny-grid"]
 _SMOKE_SCALES = [7, 8]
 
@@ -156,18 +235,19 @@ _SMOKE_SCALES = [7, 8]
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--figures", default=None,
-                    help="comma list from {table1,fig5,fig6}")
+                    help="comma list from {table1,fig5,fig6,strat}")
     ap.add_argument("--smoke", action="store_true",
-                    help="reduced fig5 subset on tiny fixtures (CI job)")
+                    help="reduced subset on the tiny fixtures (CI job): "
+                         "table1+fig5 by default, any --figures supported")
     args = ap.parse_args()
 
     if args.smoke:
         figures = (args.figures or "table1,fig5").split(",")
         datasets, scales, budget, iters = _SMOKE_DATASETS, _SMOKE_SCALES, False, 1
     else:
-        figures = (args.figures or "table1,fig5,fig6").split(",")
+        figures = (args.figures or "table1,fig5,fig6,strat").split(",")
         datasets, scales, budget, iters = DATASETS_FIG5, FIG6_SCALES, True, 2
-    unknown = set(figures) - {"table1", "fig5", "fig6"}
+    unknown = set(figures) - {"table1", "fig5", "fig6", "strat"}
     if unknown:
         ap.error(f"unknown figures: {sorted(unknown)}")
 
@@ -178,6 +258,8 @@ def main() -> None:
         fig5(datasets, budget=budget, iters=iters)
     if "fig6" in figures:
         fig6(scales, iters=iters)
+    if "strat" in figures:
+        strat(datasets, iters=iters)
 
 
 if __name__ == "__main__":

@@ -7,7 +7,7 @@ then amortize repeated counts through the plan/execute engine.
 import argparse
 import time
 
-from repro.graphs import rmat_graph, grid_graph
+from repro.graphs import complete_graph, grid_graph, rmat_graph
 from repro.core import (
     plan_triangle_count,
     triangle_count_intersection, triangle_count_matrix,
@@ -21,8 +21,12 @@ def main():
     ap.add_argument("--scale", type=int, default=10)
     args = ap.parse_args()
 
+    # the third graph is dense with a small id range, so strategy="auto"
+    # hands its wide bucket to the bitmap core (the first two stay on
+    # broadcast/probe) — the per-bucket dispatch printed below
     for g in (rmat_graph(args.scale, 8, seed=1),
-              grid_graph(40, spur_fraction=0.3, seed=2)):
+              grid_graph(40, spur_fraction=0.3, seed=2),
+              complete_graph(100)):
         print(f"\n=== {g.name}: n={g.n} m={g.m_undirected} "
               f"max_deg={g.max_degree} SSD={g.sum_square_degrees}")
         truth = triangle_count_scipy(g)
@@ -39,9 +43,14 @@ def main():
             flag = "OK " if count == truth else "BAD"
             print(f"  [{flag}] {label:42s} {count:10d}  ({dt*1e3:7.1f} ms)")
 
-        # plan/execute: host prep + compile once, then device-only replays
+        # plan/execute: host prep + compile once, then device-only replays.
+        # strategy="auto" (the default) picks a set-intersection core per
+        # degree bucket — broadcast / probe / bitmap — via the documented
+        # cost model; count_with_stats() surfaces what it chose.
         plan = plan_triangle_count(g, "intersection")
-        count = plan.count()  # first call warms the executable cache
+        count, stats = plan.count_with_stats()  # warms the executable cache
+        picks = ", ".join(f"w{w}:{s}" for w, s in stats["bucket_strategies"])
+        print(f"  strategy=auto per-bucket dispatch: {picks}")
         t0 = time.perf_counter()
         repeats = 5
         for _ in range(repeats):

@@ -12,10 +12,13 @@ Public API:
 """
 
 from repro.core.engine import (
+    STRATEGIES,
     TrianglePlan,
-    plan_triangle_count,
-    executable_cache_info,
+    choose_strategy,
     clear_executable_cache,
+    executable_cache_info,
+    plan_triangle_count,
+    resolve_strategy,
 )
 from repro.core.tc_intersection import (
     triangle_count_intersection,
@@ -46,8 +49,11 @@ from repro.core.oracle import (
 )
 
 __all__ = [
+    "STRATEGIES",
     "TrianglePlan",
     "plan_triangle_count",
+    "choose_strategy",
+    "resolve_strategy",
     "executable_cache_info",
     "clear_executable_cache",
     "triangle_count_intersection",

@@ -35,6 +35,7 @@ except ImportError:  # older jax ships it under experimental
 
 from repro.graphs.formats import Graph
 from repro.core.engine import build_tile_schedule, prepare_intersection_buckets
+from repro.kernels.intersect.ops import intersect_counts, resolve_strategy
 
 __all__ = [
     "triangle_count_matrix_distributed",
@@ -104,17 +105,34 @@ def triangle_count_intersection_distributed(
     mesh: Optional[Mesh] = None,
     *,
     widths: Sequence[int] = (8, 32, 128, 512),
+    strategy: str = "auto",
 ) -> int:
-    """Forward-algorithm TC with each degree bucket's edges sharded."""
+    """Forward-algorithm TC with each degree bucket's edges sharded.
+
+    Args:
+      g: undirected simple ``Graph``.
+      mesh: jax device mesh (defaults to a 1-D mesh over all devices); the
+        bucket's edge axis is sharded over every mesh axis.
+      widths: degree-class bucket widths.
+      strategy: per-bucket set-intersection core, resolved on the host with
+        the same ``resolve_strategy`` cost model the plan stage uses — each
+        shard then runs the strategy's jnp core locally, so the sharded path
+        and the single-device engine pick identical per-bucket kernels.
+
+    Returns:
+      The exact triangle count as a Python int (one scalar psum per bucket).
+    """
     if mesh is None:
         from repro.launch.mesh import make_mesh
         mesh = make_mesh((jax.device_count(),), ("data",))
     ndev = int(np.prod(mesh.devices.shape))
     axes = tuple(mesh.axis_names)
     buckets = prepare_intersection_buckets(g, variant="filtered", widths=widths)
+    id_range = g.n + 2  # real ids plus the n / n+1 in-row sentinels
     total = 0
     for b in buckets:
         u, v = b["u_lists"], b["v_lists"]
+        strat, bits = resolve_strategy(b["width"], id_range, strategy=strategy)
         # pad rows with disjoint sentinels so padding contributes 0
         pad = (-u.shape[0]) % ndev
         if pad:
@@ -125,16 +143,13 @@ def triangle_count_intersection_distributed(
         spec = P(axes)
 
         @jax.jit
-        def count(u, v):
+        def count(u, v, strat=strat, bits=bits):
             def local(u, v):
                 u, v = u[0], v[0]
-
-                def one(a, b):
-                    pos = jnp.clip(jnp.searchsorted(b, a), 0, b.shape[0] - 1)
-                    return (b[pos] == a).sum(dtype=jnp.int32)
-
-                part = jax.vmap(one)(u, v).sum()
-                return jax.lax.psum(part, axes)
+                counts = intersect_counts(
+                    u, v, strategy=strat, backend="jnp", bitmap_bits=bits
+                )
+                return jax.lax.psum(counts.sum(), axes)
 
             return shard_map(local, mesh=mesh, in_specs=(spec, spec),
                              out_specs=P())(u, v)

@@ -20,7 +20,8 @@ tile schedule for the matrix path; 2-core peel + induced-subgraph reform +
 bucket setup for the subgraph-matching path — uploads the resulting
 statically-shaped arrays to the default device, and binds each work unit to a
 jit-compiled executable from a process-wide cache keyed by
-``(algorithm, backend, interpret, shape)``. Two consequences:
+``(algorithm, strategy, backend, interpret, bitmap_bits, shape)``. Two
+consequences:
 
 * ``plan.count()`` is a pure device replay: one traced computation per bucket
   shape (the kernel AND its reduction live inside the same jit), summed as
@@ -28,6 +29,16 @@ jit-compiled executable from a process-wide cache keyed by
 * Plans over same-shaped graphs (e.g. the fig6 R-MAT sweep, or batches of
   generated graphs) hit the executable cache and skip XLA compilation — the
   TRUST-style decoupling of preprocessing/partitioning from counting.
+
+On the intersection lane (and the subgraph lane's join, which reuses it) the
+plan stage also selects a *set-intersection strategy* per degree bucket —
+``broadcast`` / ``probe`` / ``bitmap``, see ``repro.kernels.intersect.ops`` —
+via the documented ``choose_strategy`` cost model (``strategy="auto"``, the
+default: bitmap when the bucket's id range fits the packed width, probe for
+wide buckets, broadcast for narrow ones). The choice can be overridden per
+plan (``strategy="probe"`` etc.), is baked into each stage's executable-cache
+key, and is surfaced as ``meta["bucket_strategies"]`` by
+``count_with_stats()``.
 
 The host-stage helpers (``prepare_intersection_buckets``,
 ``build_tile_schedule``, ``choose_block``, ``peel_to_two_core``) live here and
@@ -55,7 +66,12 @@ from repro.graphs.formats import (
     orient_forward,
     to_block_sparse,
 )
-from repro.kernels.intersect.ops import intersect_counts
+from repro.kernels.intersect.ops import (
+    STRATEGIES,
+    choose_strategy,
+    intersect_counts,
+    resolve_strategy,
+)
 from repro.kernels.masked_spgemm.ops import masked_spgemm_counts
 
 __all__ = [
@@ -65,9 +81,12 @@ __all__ = [
     "build_tile_schedule",
     "choose_block",
     "peel_to_two_core",
+    "choose_strategy",
+    "resolve_strategy",
     "executable_cache_info",
     "clear_executable_cache",
     "DEFAULT_WIDTHS",
+    "STRATEGIES",
 ]
 
 DEFAULT_WIDTHS: Tuple[int, ...] = (8, 32, 128, 512)
@@ -87,15 +106,22 @@ def prepare_intersection_buckets(
     """Host-side stage of the intersection method: orientation + degree-class
     bucketing + padded neighbor gathers.
 
-    Returns a list of dicts {u_lists, v_lists, width} of jnp-ready numpy
-    arrays, one per degree-class bucket. Sentinels: u rows pad with n, v rows
-    with n+1 (never equal ⇒ padding contributes zero matches).
+    Args:
+      g: undirected simple ``Graph``.
+      variant: "filtered" — forward orientation (rank = (degree, id)), the
+        paper's "filter out half of the edges by degree order"; the oriented
+        rows double as the reformed induced subgraph's neighbor lists.
+        "full" — all directed edges with full neighbor lists (each triangle
+        found 6×), the tc-intersection-full ablation.
+      widths: ascending degree-class bucket widths; edges wider than
+        ``widths[-1]`` land in a final next-pow2 bucket.
 
-    variant="filtered": forward orientation (rank = (degree, id)) — the
-    paper's "filter out half of the edges by degree order"; the oriented rows
-    double as the reformed induced subgraph's neighbor lists.
-    variant="full": all directed edges with full neighbor lists (each triangle
-    found 6×) — the tc-intersection-full ablation.
+    Returns:
+      A list of dicts ``{u_lists, v_lists, width}``, one per non-empty
+      degree-class bucket. ``u_lists``/``v_lists`` are (E_b, W_b) int32 numpy
+      arrays of sorted neighbor lists. Sentinel-padding rule: u rows pad with
+      ``n``, v rows with ``n + 1`` (never equal ⇒ padding contributes zero
+      matches); both sentinels sort above every real id, keeping rows sorted.
     """
     if variant == "filtered":
         dag = orient_forward(g)
@@ -139,12 +165,22 @@ def build_tile_schedule(
     g: Graph, block: int = 128, permute: bool = True
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, dict]:
     """Host-side stage of the matrix method: degree permutation + BSR tiling +
-    the L/U/A triple schedule. Returns stacked (T,B,B) tile triples + stats.
+    the L/U/A triple schedule.
 
-    The returned triples are sorted heavy-first (by block density product) and
-    are the unit of distribution for multi-device TC (core/distributed.py uses
-    a snake round-robin over this order for static load balance — the TPU
-    analogue of merge-path's equal-work splitting).
+    Args:
+      g: undirected simple ``Graph``.
+      block: dense tile edge length B (128 = MXU native).
+      permute: apply the degree-order permutation first (the paper's
+        tc-matrix step 1).
+
+    Returns:
+      (l_tiles, u_tiles, a_tiles, stats): three stacked (T, B, B) float32
+      arrays — the L tile, U tile, and A mask tile of each scheduled triple —
+      plus a stats dict (num_triples, tile counts, grid, block, tile_flops).
+      Triples are sorted heavy-first (by block density product); that order is
+      the unit of distribution for multi-device TC (core/distributed.py deals
+      it round-robin for static load balance — the TPU analogue of
+      merge-path's equal-work splitting).
     """
     if permute:
         perm = degree_order_permutation(g)
@@ -222,8 +258,16 @@ def peel_to_two_core(g: Graph, labels: Optional[np.ndarray] = None,
                      query_label: Optional[int] = None) -> np.ndarray:
     """INITIALIZE_CANDIDATE_SET + iterated filter, to fixed point.
 
-    Returns a bool (n,) candidate-vertex mask. With labels, vertices whose
-    label cannot match any query vertex are pruned before the degree peel.
+    Args:
+      g: undirected simple ``Graph``.
+      labels: optional (n,) vertex labels for labeled subgraph queries.
+      query_label: with ``labels``, prune vertices whose label cannot match
+        any query vertex before the degree peel.
+
+    Returns:
+      Bool (n,) numpy mask of vertices surviving the 2-core peel (every
+      triangle vertex has ≥ 2 alive neighbors, so counting on the induced
+      subgraph is exact).
     """
     src = np.repeat(np.arange(g.n, dtype=np.int32), g.degrees)
     dst = g.col_idx
@@ -245,11 +289,13 @@ _EXECUTABLE_CACHE: Dict[tuple, Callable] = {}
 _CACHE_STATS = {"hits": 0, "misses": 0}
 
 
-def _build_intersect_executable(backend: str, interpret: bool) -> Callable:
+def _build_intersect_executable(strategy: str, backend: str, interpret: bool,
+                                bitmap_bits) -> Callable:
     @jax.jit
     def run(u_lists, v_lists):
         counts = intersect_counts(
-            u_lists, v_lists, backend=backend, interpret=interpret
+            u_lists, v_lists, strategy=strategy, backend=backend,
+            interpret=interpret, bitmap_bits=bitmap_bits,
         )
         return jnp.sum(counts)
 
@@ -268,21 +314,45 @@ def _build_matrix_executable(backend: str, interpret: bool) -> Callable:
 
 
 def get_executable(algorithm: str, backend: str, interpret: bool,
-                   shape_key: tuple) -> Callable:
+                   shape_key: tuple, strategy: Optional[str] = None,
+                   bitmap_bits: Optional[int] = None) -> Callable:
     """Fetch (or build) the jitted executable for one statically-shaped work
-    unit. Keyed by (algorithm, backend, interpret, shape) so plans over
-    same-shaped buckets/schedules share the compiled kernel."""
+    unit.
+
+    Args:
+      algorithm: "intersection" | "subgraph" (both use the intersection
+        executables) | "matrix".
+      backend: "jnp" | "pallas" | "ref" (see ``repro.kernels.*.ops``).
+      interpret: pallas interpret mode flag (part of the key: interpret and
+        compiled kernels are distinct executables).
+      shape_key: the work unit's static array shape, e.g. one degree bucket's
+        (E, W) or one tile schedule's (T, B, B).
+      strategy: resolved set-intersection strategy ("broadcast" | "probe" |
+        "bitmap") for the intersection lanes; None for matrix.
+      bitmap_bits: static packed-bitmap capacity when strategy="bitmap",
+        else None.
+
+    Returns:
+      A jitted callable summing the work unit to a scalar. Cached process-wide
+      under ``(algorithm, strategy, backend, interpret, bitmap_bits, shape)``
+      so plans over same-shaped buckets/schedules share the compiled kernel.
+    """
     if backend not in ("jnp", "pallas", "ref"):
         raise ValueError(f"unknown backend {backend!r}; "
                          f"expected 'jnp', 'pallas', or 'ref'")
-    key = (algorithm, backend, bool(interpret), tuple(shape_key))
+    key = (algorithm, strategy, backend, bool(interpret), bitmap_bits,
+           tuple(shape_key))
     fn = _EXECUTABLE_CACHE.get(key)
     if fn is not None:
         _CACHE_STATS["hits"] += 1
         return fn
     _CACHE_STATS["misses"] += 1
     if algorithm in ("intersection", "subgraph"):
-        fn = _build_intersect_executable(backend, interpret)
+        if strategy not in STRATEGIES:
+            raise ValueError(f"unresolved strategy {strategy!r}; "
+                             f"expected one of {STRATEGIES}")
+        fn = _build_intersect_executable(strategy, backend, interpret,
+                                         bitmap_bits)
     elif algorithm == "matrix":
         fn = _build_matrix_executable(backend, interpret)
     else:
@@ -311,6 +381,8 @@ class _Stage:
     executable: Callable
     args: Tuple[jnp.ndarray, ...]  # device-resident
     shape_key: tuple
+    strategy: Optional[str] = None  # resolved intersection strategy
+    bitmap_bits: Optional[int] = None  # packed capacity when strategy="bitmap"
 
 
 @dataclasses.dataclass
@@ -349,8 +421,15 @@ class TrianglePlan:
         return total
 
     def count_with_stats(self) -> Tuple[int, dict]:
-        """(count, meta) — meta carries prep statistics (prune fractions,
-        tile schedule sizes, bucket shapes) gathered at plan time."""
+        """Count once and return the plan's prep statistics alongside.
+
+        Returns:
+          (count, meta): meta carries statistics gathered at plan time —
+          prune fractions, tile schedule sizes, bucket shapes, and on the
+          intersection/subgraph lanes ``bucket_strategies``: one
+          ``(width, strategy)`` pair per degree bucket as resolved by the
+          ``strategy="auto"`` cost model (or the per-plan override).
+        """
         c = self.count()
         stats = dict(self.meta)
         if self.algorithm == "subgraph":
@@ -374,21 +453,31 @@ class TrianglePlan:
 
 
 def _plan_intersection(g: Graph, variant: str, backend: str, interpret: bool,
-                       widths: Sequence[int]) -> Tuple[List[_Stage], int, dict]:
+                       widths: Sequence[int],
+                       strategy: str = "auto") -> Tuple[List[_Stage], int, dict]:
     buckets = prepare_intersection_buckets(g, variant=variant, widths=widths)
+    # id range covers real vertex ids [0, n) plus the in-row padding
+    # sentinels n (u rows) and n+1 (v rows)
+    id_range = g.n + 2
     stages = []
     for b in buckets:
         shape_key = tuple(b["u_lists"].shape)
-        fn = get_executable("intersection", backend, interpret, shape_key)
+        strat, bits = resolve_strategy(b["width"], id_range, strategy=strategy)
+        fn = get_executable("intersection", backend, interpret, shape_key,
+                            strategy=strat, bitmap_bits=bits)
         stages.append(_Stage(
             executable=fn,
             args=(jnp.asarray(b["u_lists"]), jnp.asarray(b["v_lists"])),
             shape_key=shape_key,
+            strategy=strat,
+            bitmap_bits=bits,
         ))
     meta = dict(
         variant=variant,
         widths=tuple(widths),
+        strategy=strategy,
         bucket_shapes=[s.shape_key for s in stages],
+        bucket_strategies=[(s.shape_key[1], s.strategy) for s in stages],
         edges=int(sum(s.shape_key[0] for s in stages)),
     )
     return stages, (6 if variant == "full" else 1), meta
@@ -415,14 +504,15 @@ def _plan_matrix(g: Graph, block, permute: bool, backend: str,
 
 
 def _plan_subgraph(g: Graph, backend: str, interpret: bool,
-                   widths: Sequence[int]) -> Tuple[List[_Stage], int, dict]:
+                   widths: Sequence[int],
+                   strategy: str = "auto") -> Tuple[List[_Stage], int, dict]:
     alive = peel_to_two_core(g)
     sub, _ = induced_subgraph(g, alive)
     # join on the pruned graph; forward-filtered intersection counts each
     # triangle once (embeddings = 6 × that)
     stages, _, inner = _plan_intersection(
         sub, variant="filtered", backend=backend, interpret=interpret,
-        widths=widths,
+        widths=widths, strategy=strategy,
     )
     # subgraph stages share the intersection executables by construction
     meta = dict(
@@ -443,24 +533,42 @@ def plan_triangle_count(
     interpret: bool = True,
     variant: str = "filtered",
     widths: Sequence[int] = DEFAULT_WIDTHS,
+    strategy: str = "auto",
     block="auto",
     permute: bool = True,
 ) -> TrianglePlan:
     """Run the host stage once and return a device-resident ``TrianglePlan``.
 
-    algorithm ∈ {"intersection", "matrix", "subgraph"}; the per-algorithm
-    keyword arguments match the one-shot ``triangle_count_*`` entry points
-    (which are now thin wrappers over this function).
+    Args:
+      g: the input ``Graph`` (undirected simple CSR).
+      algorithm: "intersection" | "matrix" | "subgraph".
+      backend: "jnp" | "pallas" | "ref" per-kernel execution path.
+      interpret: pallas interpret mode (True runs kernel bodies on CPU).
+      variant: intersection lane only — "filtered" (forward algorithm) or
+        "full" (every directed edge, each triangle found 6×).
+      widths: degree-class bucket widths for the intersection/subgraph lanes.
+      strategy: intersection/subgraph lanes only — per-bucket set-intersection
+        core: "auto" (default; the documented ``choose_strategy`` cost model
+        picks bitmap/probe/broadcast per bucket) or a forced "broadcast" |
+        "probe" | "bitmap" override applied to every bucket.
+      block: matrix lane tile size, or "auto" (``choose_block``).
+      permute: matrix lane degree permutation toggle.
+
+    Returns:
+      A ``TrianglePlan`` whose ``count()`` replays the device stage only.
+      The per-algorithm keyword arguments match the one-shot
+      ``triangle_count_*`` entry points (thin wrappers over this function).
     """
     t0 = time.perf_counter()
     if algorithm == "intersection":
         stages, divisor, meta = _plan_intersection(
-            g, variant, backend, interpret, widths
+            g, variant, backend, interpret, widths, strategy
         )
     elif algorithm == "matrix":
         stages, divisor, meta = _plan_matrix(g, block, permute, backend, interpret)
     elif algorithm == "subgraph":
-        stages, divisor, meta = _plan_subgraph(g, backend, interpret, widths)
+        stages, divisor, meta = _plan_subgraph(g, backend, interpret, widths,
+                                               strategy)
     else:
         raise ValueError(
             f"unknown algorithm {algorithm!r}; expected one of {ALGORITHMS}"

@@ -42,15 +42,26 @@ def triangle_count_intersection(
     backend: str = "jnp",
     interpret: bool = True,
     widths=DEFAULT_WIDTHS,
+    strategy: str = "auto",
 ) -> int:
     """Exact triangle count via batched set intersection.
 
-    variant="filtered": forward algorithm (each triangle counted once).
-    variant="full":     Green-et-al.-style full edge list (counted 6×).
-    backend: "jnp" (binary probe), "pallas" (TPU kernel), "ref" (oracle).
+    Args:
+      g: undirected simple ``Graph``.
+      variant: "filtered" — forward algorithm (each triangle counted once);
+        "full" — Green-et-al.-style full edge list (counted 6×).
+      backend: "jnp" (pure-jnp cores), "pallas" (TPU kernels), "ref" (oracle).
+      interpret: pallas interpret mode.
+      widths: degree-class bucket widths.
+      strategy: per-bucket set-intersection core — "auto" (default cost
+        model) or forced "broadcast" | "probe" | "bitmap"; see
+        ``repro.kernels.intersect.ops``.
+
+    Returns:
+      The exact triangle count as a Python int.
     """
     plan = plan_triangle_count(
         g, "intersection", variant=variant, backend=backend,
-        interpret=interpret, widths=widths,
+        interpret=interpret, widths=widths, strategy=strategy,
     )
     return plan.count()

@@ -109,7 +109,7 @@ def subgraph_match_triangle(
     if not e_keep.any():
         return 0
     from repro.graphs.formats import bucket_edges_by_degree, csr_to_padded_neighbors
-    from repro.core.engine import get_executable
+    from repro.core.engine import get_executable, resolve_strategy
 
     # restrict intersected neighbor ids to label-q2 vertices by remapping
     # non-q2 neighbors to a sentinel on the u side only (so they never match)
@@ -123,8 +123,12 @@ def subgraph_match_triangle(
         valid = (u_lists < sub.n) & q2_ok[np.clip(u_lists, 0, sub.n - 1)]
         u_lists[~valid] = sub.n
         v_lists[v_lists == sub.n] = sub.n + 1
+        # same per-bucket dispatch as the unlabeled lanes (id range covers
+        # real ids plus the n / n+1 sentinels)
+        strat, bits = resolve_strategy(b["width"], sub.n + 2)
         run = get_executable(
-            "intersection", backend, interpret, tuple(u_lists.shape)
+            "intersection", backend, interpret, tuple(u_lists.shape),
+            strategy=strat, bitmap_bits=bits,
         )
         total += int(run(jnp.asarray(u_lists), jnp.asarray(v_lists)))
     return total

@@ -1,10 +1,37 @@
-from repro.kernels.intersect.ops import intersect_counts, intersect_counts_probe
-from repro.kernels.intersect.ref import intersect_counts_ref
+from repro.kernels.intersect.ops import (
+    BITMAP_MAX_BITS,
+    STRATEGIES,
+    choose_strategy,
+    intersect_counts,
+    intersect_counts_probe,
+    packed_bits,
+    resolve_strategy,
+)
+from repro.kernels.intersect.ref import (
+    intersect_counts_probe_ref,
+    intersect_counts_ref,
+)
 from repro.kernels.intersect.intersect import intersect_counts_pallas
+from repro.kernels.intersect.probe import intersect_counts_probe_pallas
+from repro.kernels.intersect.bitmap import (
+    intersect_counts_bitmap,
+    intersect_counts_bitmap_pallas,
+    intersect_counts_bitmap_ref,
+)
 
 __all__ = [
+    "BITMAP_MAX_BITS",
+    "STRATEGIES",
+    "choose_strategy",
+    "resolve_strategy",
+    "packed_bits",
     "intersect_counts",
     "intersect_counts_probe",
+    "intersect_counts_probe_pallas",
+    "intersect_counts_probe_ref",
+    "intersect_counts_bitmap",
+    "intersect_counts_bitmap_pallas",
+    "intersect_counts_bitmap_ref",
     "intersect_counts_ref",
     "intersect_counts_pallas",
 ]

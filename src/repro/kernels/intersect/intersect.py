@@ -1,4 +1,9 @@
-"""Pallas TPU kernel: batched sorted-list intersection (the TC hot loop).
+"""Broadcast-compare set-intersection core (the ``broadcast`` strategy).
+
+Pallas TPU kernel for batched sorted-list intersection — the TC hot loop, and
+the strategy the ``auto`` cost model keeps for narrow degree buckets where
+the O(W²) compare is pure gather-free VPU work (see ops.py for the dispatch
+and probe.py / bitmap.py for the other cores).
 
 TPU adaptation of the paper's 2-kernel (TwoSmall/TwoLarge) strategy:
 
@@ -56,11 +61,19 @@ def intersect_counts_pallas(
     tile_edges: int = 256,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Per-edge |N(u) ∩ N(v)| for padded (E, W) sorted lists.
+    """Pallas broadcast-compare kernel: per-edge |N(u) ∩ N(v)|.
 
-    E must be a multiple of ``tile_edges`` (callers pad with sentinel rows).
-    ``interpret=True`` runs the kernel body on CPU for validation; on a real
-    TPU pass interpret=False.
+    Args:
+      u_lists: (E, W) int32; sorted rows padded with a sentinel disjoint from
+        v's; E must be a multiple of ``tile_edges`` (callers pad with
+        sentinel rows — see ops.py).
+      v_lists: (E, W) int32, same layout, disjoint padding sentinel.
+      tile_edges: rows per grid step (VMEM tile height).
+      interpret: run the kernel body on CPU for validation; pass False on a
+        real TPU.
+
+    Returns:
+      (E,) int32 per-edge intersection sizes.
     """
     e, w = u_lists.shape
     assert e % tile_edges == 0, (e, tile_edges)

@@ -1,23 +1,57 @@
-"""Pure-jnp oracle for batched sorted-neighbor-list intersection.
+"""Reference implementations for batched sorted-neighbor-list intersection.
 
-Given two padded neighbor-list batches ``u_lists`` and ``v_lists`` of shape
-(E, W) — row e holding the sorted out-neighbor list of edge e's endpoints,
-padded with a sentinel that appears in neither list — returns the per-edge
-intersection sizes (E,) int32.
+``intersect_counts_ref`` is THE semantic oracle (what ``backend="ref"``
+dispatches to): O(E·W²) broadcast-compare, trivially correct, strategy-
+independent. Every strategy core (broadcast / probe / bitmap) must agree with
+it exactly on in-range ids — the tier-1 strategy sweep and the benchmark
+``strat`` figure both assert against it.
 
-This is the semantic the paper's TwoSmall/TwoLarge GPU kernels compute; the
-oracle is O(E·W²) broadcast-compare, trivially correct.
+``intersect_counts_probe_ref`` is an additional numpy cross-check for the
+probe cores (per-row ``np.searchsorted``), sharing no code with the jnp or
+Pallas implementations. The matching bitmap reference lives in bitmap.py
+because it must also model the bitmap masking contract.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["intersect_counts_ref"]
+__all__ = ["intersect_counts_ref", "intersect_counts_probe_ref"]
 
 
 def intersect_counts_ref(u_lists: jnp.ndarray, v_lists: jnp.ndarray) -> jnp.ndarray:
-    """O(W^2) membership test. Padding must use sentinels that never collide
-    (callers use n for u-padding and n+1 for v-padding)."""
+    """O(W²) broadcast-compare membership oracle.
+
+    Args:
+      u_lists: (E, W) int32; row e holds a sorted neighbor list padded with a
+        sentinel that appears in neither list (the engine uses ``n``).
+      v_lists: (E, W) int32, same layout, padded with a *different* sentinel
+        (the engine uses ``n + 1``) so padding contributes zero matches.
+
+    Returns:
+      (E,) int32 — per-edge |N(u) ∩ N(v)| (pairwise-equality count; equal to
+      the set-intersection size whenever rows are strictly increasing apart
+      from the trailing padding run).
+    """
     eq = u_lists[:, :, None] == v_lists[:, None, :]
     return eq.sum(axis=(1, 2)).astype(jnp.int32)
+
+
+def intersect_counts_probe_ref(u_lists, v_lists) -> np.ndarray:
+    """Numpy per-row binary-search reference for the probe cores (tests only).
+
+    Args:
+      u_lists / v_lists: (E, W) integer arrays, rows sorted ascending with
+        disjoint padding sentinels.
+
+    Returns:
+      (E,) int32 numpy array — count of u elements found in the v row.
+    """
+    u = np.asarray(u_lists)
+    v = np.asarray(v_lists)
+    out = np.zeros(u.shape[0], dtype=np.int32)
+    for e in range(u.shape[0]):
+        pos = np.clip(np.searchsorted(v[e], u[e]), 0, v.shape[1] - 1)
+        out[e] = int((v[e][pos] == u[e]).sum())
+    return out

@@ -54,10 +54,20 @@ def masked_spgemm_pallas(
     tile_triples: int = 8,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Per-triple sum(A ∘ (L @ U)). Shapes (T, B, B) ×3 -> (T,) f32.
+    """Pallas fused masked block-SpGEMM: per-triple ``sum(A ∘ (L @ U))``.
 
-    T must be a multiple of tile_triples (host pads with zero tiles, which
-    contribute exactly 0 to the count).
+    Args:
+      l_tiles: (T, B, B) float32/bf16 dense L tiles; T must be a multiple of
+        ``tile_triples`` (callers pad with zero tiles, which contribute
+        exactly 0 to the count).
+      u_tiles: (T, B, B) U tiles, same dtype.
+      a_tiles: (T, B, B) mask tiles (strict upper triangle of A).
+      tile_triples: triples per grid step (VMEM tile depth).
+      interpret: run the kernel body on CPU for validation; pass False on a
+        real TPU.
+
+    Returns:
+      (T,) float32 per-triple masked partial wedge counts.
     """
     t, b, b2 = l_tiles.shape
     assert b == b2 and t % tile_triples == 0, (t, b, b2, tile_triples)

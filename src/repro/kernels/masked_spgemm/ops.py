@@ -51,6 +51,22 @@ def masked_spgemm_counts(
     tile_triples: int = 8,
     interpret: bool = True,
 ) -> jnp.ndarray:
+    """Dispatch per-triple masked wedge counts ``sum(A ∘ (L @ U))``.
+
+    Args:
+      l_tiles: (T, B, B) float32 (or bf16) dense L tiles from the host
+        schedule; zero tiles are valid padding and contribute exactly 0.
+      u_tiles: (T, B, B) U tiles, same dtype/layout.
+      a_tiles: (T, B, B) strict-upper mask tiles.
+      backend: "pallas" | "jnp" | "ref" (see module docstring).
+      tile_triples: pallas grid tile depth; T is zero-padded to a multiple of
+        it and the padding stripped from the result.
+      interpret: pallas interpret mode (True = run kernel bodies on CPU).
+
+    Returns:
+      (T,) float32 per-triple partial counts; their sum is the triangle
+      count when A covers the strict upper triangle.
+    """
     if backend == "pallas":
         t = l_tiles.shape[0]
         pad = (-t) % tile_triples

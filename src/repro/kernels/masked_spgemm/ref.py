@@ -22,6 +22,15 @@ __all__ = ["masked_spgemm_ref"]
 def masked_spgemm_ref(
     l_tiles: jnp.ndarray, u_tiles: jnp.ndarray, a_tiles: jnp.ndarray
 ) -> jnp.ndarray:
+    """One-shot einsum oracle for the fused masked block-SpGEMM kernel.
+
+    Args:
+      l_tiles / u_tiles / a_tiles: (T, B, B) stacked dense tiles (see module
+        docstring for the triple-schedule layout).
+
+    Returns:
+      (T,) float32 — per-triple ``sum(A_IJ ∘ (L_IK @ U_KJ))``.
+    """
     prod = jnp.einsum(
         "tik,tkj->tij", l_tiles, u_tiles, preferred_element_type=jnp.float32
     )

@@ -1,0 +1,23 @@
+"""Tier-1 half of the docs gate: every relative link in README.md and
+docs/*.md resolves. The README quickstart doctest — the slow, jax-importing
+half — runs only in the CI `docs` job (tools/check_docs.py does both), so
+the link check is not paid for twice per push."""
+
+import importlib.util
+import pathlib
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _load_check_docs():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", _ROOT / "tools" / "check_docs.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_relative_links_resolve():
+    errors = _load_check_docs().check_links()
+    assert not errors, "\n".join(errors)

@@ -78,8 +78,53 @@ def test_subgraph_plan_shares_intersection_executables():
     g = grid_graph(12, spur_fraction=0.3, seed=35)
     p_sub = plan_triangle_count(g, "subgraph")
     for st in p_sub.stages:
-        key = ("intersection", "jnp", True, st.shape_key)
+        key = ("intersection", st.strategy, "jnp", True, st.bitmap_bits,
+               st.shape_key)
         assert engine._EXECUTABLE_CACHE[key] is st.executable
+
+
+def test_strategy_override_and_auto_selection():
+    """strategy="auto" (the default) resolves per bucket via choose_strategy;
+    forced overrides apply to every bucket and still match the oracle."""
+    from repro.core import STRATEGIES, choose_strategy
+
+    g = rmat_graph(9, 10, seed=34)
+    truth = triangle_count_scipy(g)
+    auto = plan_triangle_count(g, "intersection")
+    _, stats = auto.count_with_stats()
+    assert stats["strategy"] == "auto"
+    assert stats["bucket_strategies"] == [
+        (w, choose_strategy(w, g.n + 2)) for w, _ in stats["bucket_strategies"]
+    ]
+    for forced in STRATEGIES:
+        plan = plan_triangle_count(g, "intersection", strategy=forced)
+        assert all(st.strategy == forced for st in plan.stages)
+        assert plan.count() == truth, forced
+        if forced == "bitmap":  # forced beyond the packed width still works
+            assert all(st.bitmap_bits >= g.n + 2 for st in plan.stages)
+
+
+def test_auto_selects_bitmap_when_id_range_fits():
+    """Dense small graph: every id fits the top bucket's packed width, so the
+    cost model hands that bucket to the bitmap core."""
+    from repro.graphs import complete_graph
+
+    g = complete_graph(100)  # forward lists are 128-wide; 102 ids < 128 bits
+    plan = plan_triangle_count(g, "intersection")
+    assert ("bitmap" in {s for _, s in plan.meta["bucket_strategies"]}), \
+        plan.meta["bucket_strategies"]
+    assert plan.count() == triangle_count_scipy(g)
+
+
+def test_cache_keys_distinguish_strategies():
+    """Same bucket shapes, different strategy ⇒ different cache entries."""
+    g = rmat_graph(8, 6, seed=38)
+    p1 = plan_triangle_count(g, "intersection", strategy="probe")
+    p2 = plan_triangle_count(g, "intersection", strategy="broadcast")
+    assert p1.shape_keys == p2.shape_keys
+    for s1, s2 in zip(p1.stages, p2.stages):
+        assert s1.executable is not s2.executable
+    assert p1.count() == p2.count() == triangle_count_scipy(g)
 
 
 _WIDTHS = (4, 8, 16, 64)

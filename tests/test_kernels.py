@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.intersect import (
-    intersect_counts, intersect_counts_pallas, intersect_counts_ref,
+    intersect_counts, intersect_counts_bitmap_pallas, intersect_counts_pallas,
+    intersect_counts_probe_pallas, intersect_counts_ref,
 )
 from repro.kernels.masked_spgemm import masked_spgemm_pallas, masked_spgemm_ref
 from repro.kernels.flash_attention import (
@@ -38,6 +39,15 @@ def test_intersect_pallas_matches_ref(e, w, dtype):
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
     probe = intersect_counts(jnp.asarray(u), jnp.asarray(v), backend="jnp")
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(probe))
+    # the other two strategy kernels compute the same counts
+    probe_pal = intersect_counts_probe_pallas(
+        jnp.asarray(u), jnp.asarray(v), tile_edges=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(probe_pal))
+    bits = ((2 * n + e * w) + 31) // 32 * 32  # cover the dedup sentinels too
+    bm_pal = intersect_counts_bitmap_pallas(
+        jnp.asarray(u), jnp.asarray(v), num_bits=bits, tile_edges=64,
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(bm_pal))
 
 
 def test_intersect_padding_rows():

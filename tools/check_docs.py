@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Docs gate (the CI `docs` job; also runnable locally):
+
+1. every relative link in README.md and docs/*.md resolves to a real file;
+2. the fenced doctest-style quickstart snippet(s) in README.md pass under
+   ``python -m doctest``.
+
+Usage: PYTHONPATH=src python tools/check_docs.py
+Exits non-zero with one line per failure.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# [text](target) — target captured up to the closing paren, no whitespace
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"```[a-z]*\n(.*?)```", re.S)
+_PY_FENCE_RE = re.compile(r"```python\n(.*?)```", re.S)
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def check_links() -> list:
+    """Relative links in README.md and docs/*.md must resolve."""
+    errors = []
+    files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    for f in files:
+        text = f.read_text(encoding="utf-8")
+        text = _FENCE_RE.sub("", text)  # code blocks are not links
+        for target in _LINK_RE.findall(text):
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (f.parent / rel).resolve().exists():
+                errors.append(
+                    f"{f.relative_to(ROOT)}: broken relative link -> {target}"
+                )
+    return errors
+
+
+def check_quickstart_doctest() -> list:
+    """Extract ```python fenced blocks containing >>> from README.md and run
+    each under `python -m doctest` (the block text is a doctest file)."""
+    errors = []
+    readme = (ROOT / "README.md").read_text(encoding="utf-8")
+    snippets = [b for b in _PY_FENCE_RE.findall(readme) if ">>>" in b]
+    if not snippets:
+        return ["README.md: no doctest-style ```python quickstart snippet found"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    for i, snippet in enumerate(snippets):
+        with tempfile.NamedTemporaryFile(
+            "w", suffix=f".readme-snippet-{i}.txt", delete=False
+        ) as fh:
+            fh.write(snippet)
+            path = fh.name
+        try:
+            proc = subprocess.run(
+                [sys.executable, "-m", "doctest", path],
+                capture_output=True, text=True, env=env, timeout=600,
+            )
+            if proc.returncode != 0:
+                errors.append(
+                    f"README.md: quickstart snippet {i} failed doctest:\n"
+                    f"{proc.stdout}{proc.stderr}"
+                )
+        finally:
+            os.unlink(path)
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_quickstart_doctest()
+    for e in errors:
+        print(e)
+    if not errors:
+        print("docs OK: links resolve, quickstart snippet passes doctest")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
