@@ -10,7 +10,9 @@ Prints ``name,prep_us,count_us,derived`` CSV rows:
   table1_*   — dataset statistics (derived = exact triangle count)
   fig5_*     — per-method wall clock per dataset, normalized to the
                sequential CPU baseline (derived = count-time speedup ×; the
-               paper's Fig. 5 bar chart)
+               paper's Fig. 5 bar chart). Includes a beyond-paper ``tc-auto``
+               row per dataset: the facade's ``algorithm="auto"`` cost model,
+               derived = ``<speedup>x;auto=<lane chosen>``
   fig6_*     — runtime vs Σd² scaling for intersection- and matrix-based TC
                (derived = fitted log-log slope of count time; the paper's
                Fig. 6 shows slope ≈ 1) plus the leading-constant ratio
@@ -44,7 +46,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.graphs import DATASETS, load_dataset
-from repro.core import plan_triangle_count, triangle_count_scipy
+from repro.core import CountOptions, TriangleCounter, triangle_count_scipy
 from repro.core.engine import get_executable, prepare_intersection_buckets
 from repro.kernels.intersect import (
     STRATEGIES, intersect_counts_probe, intersect_counts_ref, resolve_strategy,
@@ -72,26 +74,30 @@ def _time(fn, *, warmup: int = 1, iters: int = 2) -> float:
     return best * 1e6
 
 
-# method -> (engine algorithm, plan kwargs)
-_PLAN_METHODS = {
-    "tc-intersection-filtered": ("intersection", dict(variant="filtered")),
-    "tc-intersection-full": ("intersection", dict(variant="full")),
-    "tc-matrix": ("matrix", dict(block="auto")),
-    "tc-SM": ("subgraph", dict()),
+# method -> the facade's typed options (benchmarks go through the same
+# front door users do; "tc-auto" exercises the cross-lane cost model)
+_METHOD_OPTIONS = {
+    "tc-intersection-filtered": CountOptions(algorithm="intersection"),
+    "tc-intersection-full": CountOptions(algorithm="intersection",
+                                         variant="full"),
+    "tc-matrix": CountOptions(algorithm="matrix"),  # block="auto"
+    "tc-SM": CountOptions(algorithm="subgraph"),
+    "tc-auto": CountOptions(),  # algorithm="auto"
 }
 
 
 def _timed_plan(g, meth: str, **overrides):
-    """Build the plan AND run its first count for one fig5/fig6 cell, so
+    """Build the session AND run its first count for one fig5/fig6 cell, so
     prep_us covers the whole one-time cost: host prep, device upload, and
-    the first trace+compile. Returns (plan, first_count, prep_us)."""
-    algorithm, kwargs = _PLAN_METHODS[meth]
-    kwargs = {**kwargs, **overrides}
+    the first trace+compile. Returns (result, prep_us); ``result.plan.count``
+    is the replay to time."""
+    opts = _METHOD_OPTIONS[meth]
+    if overrides:
+        opts = opts.replace(**overrides)
     t0 = time.perf_counter()
-    plan = plan_triangle_count(g, algorithm, **kwargs)
-    first = plan.count()
+    result = TriangleCounter(g, opts).count()
     prep_us = (time.perf_counter() - t0) * 1e6
-    return plan, first, prep_us
+    return result, prep_us
 
 
 def table1(datasets) -> None:
@@ -119,7 +125,7 @@ def fig5(datasets, *, budget: bool = True, iters: int = 2) -> None:
         base_us = _time(lambda: triangle_count_scipy(g), iters=iters)
         _emit(f"fig5_{name}_cpu-baseline", 0.0, base_us, "1.00x")
         for meth in ("tc-intersection-filtered", "tc-intersection-full",
-                     "tc-matrix", "tc-SM"):
+                     "tc-matrix", "tc-SM", "tc-auto"):
             if (budget and meth == "tc-intersection-full"
                     and g.m_undirected > _FULL_LIMIT):
                 _emit(f"fig5_{name}_{meth}", 0.0, 0.0, "skipped(budget)")
@@ -127,11 +133,13 @@ def fig5(datasets, *, budget: bool = True, iters: int = 2) -> None:
             if budget and meth == "tc-matrix" and name not in _MATRIX_SETS:
                 _emit(f"fig5_{name}_{meth}", 0.0, 0.0, "skipped(budget)")
                 continue
-            plan, first, prep_us = _timed_plan(g, meth)
-            assert first == truth, (name, meth)
-            count_us = _time(plan.count, iters=iters)
-            _emit(f"fig5_{name}_{meth}", prep_us, count_us,
-                  f"{base_us / count_us:.2f}x")
+            result, prep_us = _timed_plan(g, meth)
+            assert result == truth, (name, meth)
+            count_us = _time(result.plan.count, iters=iters)
+            derived = f"{base_us / count_us:.2f}x"
+            if meth == "tc-auto":  # surface the cost model's lane choice
+                derived += f";auto={result.algorithm}"
+            _emit(f"fig5_{name}_{meth}", prep_us, count_us, derived)
 
 
 def fig6(scales, *, iters: int = 2) -> None:
@@ -141,10 +149,10 @@ def fig6(scales, *, iters: int = 2) -> None:
         ssd = g.sum_square_degrees
         # fixed block=128 so every scale times the same tile size and the
         # slope fit stays comparable (choose_block could flip mid-sweep)
-        plan_i, _, prep_i = _timed_plan(g, "tc-intersection-filtered")
-        plan_m, _, prep_m = _timed_plan(g, "tc-matrix", block=128)
-        us_i = _time(plan_i.count, iters=iters)
-        us_m = _time(plan_m.count, iters=iters)
+        res_i, prep_i = _timed_plan(g, "tc-intersection-filtered")
+        res_m, prep_m = _timed_plan(g, "tc-matrix", block=128)
+        us_i = _time(res_i.plan.count, iters=iters)
+        us_m = _time(res_m.plan.count, iters=iters)
         ssds.append(ssd)
         t_int.append(us_i)
         t_mat.append(us_m)

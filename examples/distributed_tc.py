@@ -16,8 +16,7 @@ import jax  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.graphs import rmat_graph  # noqa: E402
 from repro.core import (  # noqa: E402
-    triangle_count_matrix_distributed,
-    triangle_count_intersection_distributed, triangle_count_scipy,
+    CountOptions, TriangleCounter, triangle_count_scipy,
 )
 
 
@@ -27,17 +26,19 @@ def main():
     g = rmat_graph(12, 8, seed=3)
     truth = triangle_count_scipy(g)
     print(f"graph {g.name}: n={g.n} m={g.m_undirected} truth={truth}")
-    for label, fn in [
+    # the distributed lanes go through the same front door — select them by
+    # name in CountOptions and hand the mesh to the session
+    for label, opts in [
         ("distributed masked block-SpGEMM",
-         lambda: triangle_count_matrix_distributed(g, mesh, block=64)),
+         CountOptions(algorithm="matrix_distributed", block=64)),
         ("distributed forward-intersection",
-         lambda: triangle_count_intersection_distributed(g, mesh)),
+         CountOptions(algorithm="intersection_distributed")),
     ]:
         t0 = time.perf_counter()
-        count = fn()
+        res = TriangleCounter(g, opts, mesh=mesh).count()
         dt = time.perf_counter() - t0
-        status = "OK" if count == truth else "MISMATCH"
-        print(f"  [{status}] {label}: {count}  ({dt*1e3:.1f} ms, "
+        status = "OK" if res == truth else "MISMATCH"
+        print(f"  [{status}] {label}: {res.count}  ({dt*1e3:.1f} ms, "
               f"{mesh.devices.size} devices)")
 
 

@@ -5,16 +5,20 @@ applications of triangle enumeration (§1).
 """
 
 from repro.graphs import rmat_graph, watts_strogatz_graph
-from repro.core import k_truss, clustering_coefficients, transitivity
+from repro.core import TriangleCounter, k_truss
 
 
 def main():
     for g in (rmat_graph(10, 8, seed=4), watts_strogatz_graph(2000, 8, 0.05)):
-        cc = clustering_coefficients(g)
+        # clustering metrics ride the session's cached plan (the k-truss
+        # peel below still uses listing.py's host-side enumeration — it
+        # needs the triangle *lists*, not just counts)
+        tc = TriangleCounter(g)
+        cc = tc.clustering_coefficients()
         print(f"\n=== {g.name}: n={g.n} m={g.m_undirected}")
         print(f"  mean clustering coefficient: {cc.mean():.4f} "
               f"(small-world signature: {'yes' if cc.mean() > 0.1 else 'no'})")
-        print(f"  transitivity: {transitivity(g):.4f}")
+        print(f"  transitivity: {tc.transitivity():.4f}")
         for k in (3, 4, 5, 6):
             t = k_truss(g, k)
             print(f"  {k}-truss: {t.m_undirected:7d} edges "

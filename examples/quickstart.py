@@ -1,5 +1,6 @@
-"""Quickstart: count triangles three ways (the paper's three formulations),
-then amortize repeated counts through the plan/execute engine.
+"""Quickstart: one front door (`TriangleCounter` + `CountOptions`) over the
+paper's three formulations — compare the lanes, let `algorithm="auto"` pick,
+then amortize repeated counts through the session's cached plan.
 
     PYTHONPATH=src python examples/quickstart.py [--scale 10]
 """
@@ -9,10 +10,9 @@ import time
 
 from repro.graphs import complete_graph, grid_graph, rmat_graph
 from repro.core import (
-    plan_triangle_count,
-    triangle_count_intersection, triangle_count_matrix,
-    triangle_count_subgraph, triangle_count_scipy,
-    clustering_coefficients, transitivity, enumerate_triangles,
+    CountOptions,
+    TriangleCounter,
+    triangle_count_scipy,
 )
 
 
@@ -21,51 +21,62 @@ def main():
     ap.add_argument("--scale", type=int, default=10)
     args = ap.parse_args()
 
-    # the third graph is dense with a small id range, so strategy="auto"
-    # hands its wide bucket to the bitmap core (the first two stay on
-    # broadcast/probe) — the per-bucket dispatch printed below
-    for g in (rmat_graph(args.scale, 8, seed=1),
+    # three topology classes, three different winners: skewed R-MAT (the
+    # intersection lane), a mesh-like grid (the SM lane — 2-core peel
+    # collapses the spurs), and a small dense graph (the matrix lane fills
+    # whole MXU tiles; its wide bucket also goes to the bitmap core)
+    graphs = (rmat_graph(args.scale, 8, seed=1),
               grid_graph(40, spur_fraction=0.3, seed=2),
-              complete_graph(100)):
+              complete_graph(100))
+    for g in graphs:
         print(f"\n=== {g.name}: n={g.n} m={g.m_undirected} "
               f"max_deg={g.max_degree} SSD={g.sum_square_degrees}")
         truth = triangle_count_scipy(g)
-        for label, fn in [
-            ("tc-intersection (forward algorithm)",
-             lambda: triangle_count_intersection(g)),
-            ("tc-matrix (masked block-SpGEMM)",
-             lambda: triangle_count_matrix(g, block=64)),
-            ("tc-SM (filter + join)", lambda: triangle_count_subgraph(g)),
-        ]:
-            t0 = time.perf_counter()
-            count = fn()
-            dt = time.perf_counter() - t0
-            flag = "OK " if count == truth else "BAD"
-            print(f"  [{flag}] {label:42s} {count:10d}  ({dt*1e3:7.1f} ms)")
 
-        # plan/execute: host prep + compile once, then device-only replays.
-        # strategy="auto" (the default) picks a set-intersection core per
-        # degree bucket — broadcast / probe / bitmap — via the documented
-        # cost model; count_with_stats() surfaces what it chose.
-        plan = plan_triangle_count(g, "intersection")
-        count, stats = plan.count_with_stats()  # warms the executable cache
-        picks = ", ".join(f"w{w}:{s}" for w, s in stats["bucket_strategies"])
-        print(f"  strategy=auto per-bucket dispatch: {picks}")
+        # every lane through the same front door, one options bag each
+        for opts in (CountOptions(algorithm="intersection"),
+                     CountOptions(algorithm="matrix", block=64),
+                     CountOptions(algorithm="subgraph")):
+            t0 = time.perf_counter()
+            res = TriangleCounter(g, opts).count()
+            dt = time.perf_counter() - t0
+            flag = "OK " if res == truth else "BAD"
+            print(f"  [{flag}] algorithm={res.algorithm:13s} "
+                  f"{res.count:10d}  ({dt*1e3:7.1f} ms)")
+
+        # the cross-lane cost model: CountOptions() means algorithm="auto";
+        # CountResult reports the lane it chose and the per-bucket
+        # set-intersection strategies the plan stage resolved
+        tc = TriangleCounter(g)  # algorithm="auto"
+        res = tc.count()
+        assert res == truth
+        picks = ", ".join(f"w{w}:{s}" for w, s in res.bucket_strategies or [])
+        print(f"  auto chose: {res.algorithm}"
+              + (f"  (per-bucket dispatch: {picks})" if picks else ""))
+
+        # the session owns ONE plan: replays are device-only
         t0 = time.perf_counter()
         repeats = 5
         for _ in range(repeats):
-            c = plan.count()
-            assert c == count
+            assert tc.count() == truth
         replay_ms = (time.perf_counter() - t0) * 1e3 / repeats
-        print(f"  plan/execute: prep {plan.prep_seconds*1e3:.1f} ms once, "
-              f"then {replay_ms:.1f} ms per cached count() "
-              f"({plan.num_stages} bucket executables)")
+        print(f"  session replay: prep {res.prep_seconds*1e3:.1f} ms once, "
+              f"then {replay_ms:.1f} ms per cached count()")
 
-        tris = enumerate_triangles(g)
-        cc = clustering_coefficients(g)
-        print(f"  enumeration: {tris.shape[0]} triangles listed; "
-              f"mean clustering coeff {cc.mean():.4f}; "
-              f"transitivity {transitivity(g):.4f}")
+        # per-vertex analysis rides the same cached plan (no host-side
+        # re-enumeration): clustering + transitivity from one device replay
+        cc = tc.clustering_coefficients()
+        print(f"  analysis: mean clustering coeff {cc.mean():.4f}; "
+              f"transitivity {tc.transitivity():.4f}")
+
+    # batches share the executable cache: same options, many graphs
+    batch = [rmat_graph(args.scale - 2, 6, seed=s) for s in range(4)]
+    t0 = time.perf_counter()
+    results = TriangleCounter(batch[0]).count_many(batch)
+    dt = time.perf_counter() - t0
+    print(f"\ncount_many over {len(batch)} R-MAT graphs: "
+          f"{[r.count for r in results]} ({dt*1e3:.1f} ms; "
+          f"same-shaped plans reuse cached executables)")
 
 
 if __name__ == "__main__":

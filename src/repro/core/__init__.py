@@ -1,16 +1,35 @@
-"""Core library: the paper's three exact triangle-counting formulations.
+"""Core library: the paper's three exact triangle-counting formulations
+behind one front door.
 
 Public API:
-    plan_triangle_count / TrianglePlan — plan/execute engine: host prep once,
-        device-resident buffers + cached compiled kernels, replayable count()
-    triangle_count_intersection  — forward algorithm, bucketed batch intersection
-    triangle_count_matrix        — masked block-SpGEMM (MXU tile schedule)
-    triangle_count_subgraph      — filter(2-core) + join subgraph matching
-    subgraph_match_triangle      — labeled triangle queries (SM generality)
-    enumerate_triangles / k_truss / clustering_coefficients / transitivity
-    triangle_count_*_distributed — shard_map multi-pod variants
+    TriangleCounter / CountOptions / CountResult — the session facade: one
+        typed options bag, one cached plan, cross-lane ``algorithm="auto"``
+    register_algorithm / available_algorithms / choose_algorithm /
+        set_auto_chooser — the algorithm registry + auto cost model
+    plan_triangle_count / TrianglePlan — the plan/execute engine underneath:
+        host prep once, device-resident buffers + cached compiled kernels
+    DEFAULT_INTERPRET / resolve_interpret — the single interpret-mode default
+        (``TC_INTERPRET`` env var)
+    enumerate_triangles / k_truss / edge_support — host-side enumeration
+        applications (per-vertex analysis lives on ``TriangleCounter``)
+    triangle_count_scipy / triangle_count_brute / triangle_count_forward_cpu
+        — oracles
+    triangle_count_* (+ ``*_distributed``) — DEPRECATED one-shot shims over
+        the facade; signatures and return values unchanged
 """
 
+from repro.core.options import (
+    CountOptions,
+    DEFAULT_INTERPRET,
+    DEFAULT_WIDTHS,
+    resolve_interpret,
+)
+from repro.core.registry import (
+    available_algorithms,
+    choose_algorithm,
+    register_algorithm,
+    set_auto_chooser,
+)
 from repro.core.engine import (
     STRATEGIES,
     TrianglePlan,
@@ -20,6 +39,7 @@ from repro.core.engine import (
     plan_triangle_count,
     resolve_strategy,
 )
+from repro.core.api import CountResult, TriangleCounter
 from repro.core.tc_intersection import (
     triangle_count_intersection,
     prepare_intersection_buckets,
@@ -49,6 +69,16 @@ from repro.core.oracle import (
 )
 
 __all__ = [
+    "CountOptions",
+    "CountResult",
+    "TriangleCounter",
+    "DEFAULT_INTERPRET",
+    "DEFAULT_WIDTHS",
+    "resolve_interpret",
+    "register_algorithm",
+    "available_algorithms",
+    "choose_algorithm",
+    "set_auto_chooser",
     "STRATEGIES",
     "TrianglePlan",
     "plan_triangle_count",

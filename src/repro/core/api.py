@@ -1,0 +1,250 @@
+"""One front door for triangle counting: ``TriangleCounter`` + ``CountResult``.
+
+The paper's central result is comparative — three formulations with different
+winners per graph shape — so the public API is a single session object over a
+typed options bag rather than three differently-shaped free functions:
+
+    from repro.core import TriangleCounter, CountOptions
+
+    tc = TriangleCounter(g)                      # algorithm="auto"
+    res = tc.count()                             # CountResult
+    res.count, res.algorithm                     # count + the lane chosen
+    res.bucket_strategies                        # per-bucket kernel picks
+    tc.count()                                   # replays the cached plan
+
+``TriangleCounter`` owns ONE ``TrianglePlan`` (built lazily through the
+algorithm registry, ``repro.core.registry``): every ``count()`` is a device
+replay, ``count_many()`` maps the same options over a graph batch (same-shaped
+graphs share the process-wide executable cache), and the per-vertex analysis
+surface (``triangles_per_vertex`` / ``clustering_coefficients`` /
+``transitivity``) replays the plan's cached device buffers instead of
+``listing.py``'s engine-bypassing host enumeration.
+
+``CountResult`` replaces the ``(int, dict)`` tuple of the old
+``count_with_stats()``: the count plus which lane ran, per-bucket strategies,
+prep/exec timings, and the live plan handle. It compares equal to plain ints
+(``res == triangle_count_scipy(g)``) so oracle checks read naturally.
+
+The legacy one-shot functions (``triangle_count_intersection`` /
+``triangle_count_matrix`` / ``triangle_count_subgraph`` and the
+``*_distributed`` pair) are deprecated shims over this facade — signatures
+preserved, same return values, plus a ``DeprecationWarning``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import registry
+from repro.core.engine import plan_triangle_count
+from repro.core.options import CountOptions
+from repro.graphs.formats import Graph
+
+__all__ = ["CountResult", "TriangleCounter", "warn_deprecated"]
+
+
+def warn_deprecated(old: str, new: str) -> None:
+    """Emit the facade's standard DeprecationWarning (used by the legacy
+    ``triangle_count_*`` shims; stacklevel points at the shim's caller)."""
+    warnings.warn(
+        f"{old} is deprecated; use {new} (see README.md §Migration)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+@dataclasses.dataclass(eq=False)
+class CountResult:
+    """One triangle count plus everything about how it was produced.
+
+    Attributes:
+      count: the exact triangle count.
+      algorithm: the lane that ran — the resolved choice when the session's
+        options said ``algorithm="auto"``.
+      options: the ``CountOptions`` the session was built from (``auto``
+        preserved as written; ``algorithm`` above is the resolution).
+      bucket_strategies: intersection/subgraph lanes — the per-degree-bucket
+        ``(width, strategy)`` picks; None for lanes without buckets.
+      prep_seconds: the plan's one-time host stage (0.0 for one-shot lanes).
+      exec_seconds: this count's device replay, measured around ``count()``.
+      plan: the live plan handle (``TrianglePlan`` or ``OneShotPlan``) —
+        replay it directly, inspect ``plan.meta``, or time ``plan.count``.
+      meta: the plan's statistics dict (prune fractions, tile schedule
+        sizes, bucket shapes, ``num_embeddings`` on the subgraph lane).
+
+    Compares equal to ints via ``count`` (and coerces with ``int()``), so
+    ``result == triangle_count_scipy(g)`` is the natural oracle check.
+    """
+
+    count: int
+    algorithm: str
+    options: CountOptions
+    bucket_strategies: Optional[List[Tuple[int, str]]]
+    prep_seconds: float
+    exec_seconds: float
+    plan: Any
+    meta: Dict[str, Any]
+
+    def __int__(self) -> int:
+        return self.count
+
+    def __index__(self) -> int:
+        return self.count
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, CountResult):
+            return self.count == other.count
+        if isinstance(other, (int, np.integer)):
+            return self.count == int(other)
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return (f"CountResult(count={self.count}, "
+                f"algorithm={self.algorithm!r}, "
+                f"prep_seconds={self.prep_seconds:.4f}, "
+                f"exec_seconds={self.exec_seconds:.4f})")
+
+
+class TriangleCounter:
+    """A counting session: one graph, one typed options bag, one cached plan.
+
+    Args:
+      g: the input ``Graph`` (undirected simple CSR).
+      options: a ``CountOptions``; None builds one from ``**overrides``.
+      mesh: jax device mesh, consumed by the distributed lanes only.
+      **overrides: ``CountOptions`` field overrides, applied on top of
+        ``options`` (or the defaults) — ``TriangleCounter(g,
+        algorithm="matrix", block=64)`` reads like the old free functions.
+
+    ``algorithm="auto"`` resolves ONCE at construction via the registry's
+    documented cost model (``choose_algorithm``); the choice is exposed as
+    ``.algorithm`` and in every ``CountResult``. The plan builds lazily on
+    first use and is replayed by every subsequent ``count()`` — equal options
+    over same-shaped graphs also share the engine's process-wide executable
+    cache, so a second session compiles nothing new.
+    """
+
+    def __init__(self, g: Graph, options: Optional[CountOptions] = None,
+                 *, mesh=None, **overrides):
+        if options is None:
+            options = CountOptions(**overrides)
+        elif overrides:
+            options = options.replace(**overrides)
+        if not isinstance(options, CountOptions):
+            raise TypeError(
+                f"options must be a CountOptions, got {type(options).__name__}"
+            )
+        self.graph = g
+        self.options = options
+        self.mesh = mesh
+        self.algorithm = (options.algorithm if options.algorithm != "auto"
+                          else registry.choose_algorithm(g))
+        self._plan = None
+        self._vertex_counts: Optional[np.ndarray] = None
+
+    @property
+    def plan(self):
+        """The session's plan, built on first access via the registry."""
+        if self._plan is None:
+            planner = registry.get_algorithm(self.algorithm)
+            self._plan = planner(self.graph, self.options, mesh=self.mesh)
+        return self._plan
+
+    def count(self) -> CountResult:
+        """Count triangles (device replay after the first call)."""
+        plan = self.plan
+        t0 = time.perf_counter()
+        c = plan.count()
+        exec_seconds = time.perf_counter() - t0
+        meta = dict(getattr(plan, "meta", None) or {})
+        if self.algorithm == "subgraph":
+            meta["num_embeddings"] = 6 * c  # all |Aut(K3)| automorphisms
+        return CountResult(
+            count=c,
+            algorithm=self.algorithm,
+            options=self.options,
+            bucket_strategies=meta.get("bucket_strategies"),
+            prep_seconds=float(getattr(plan, "prep_seconds", 0.0)),
+            exec_seconds=exec_seconds,
+            plan=plan,
+            meta=meta,
+        )
+
+    def count_many(self, graphs: Iterable[Graph]) -> List[CountResult]:
+        """Count a batch of graphs under this session's options.
+
+        Each graph gets its own plan (and, under ``algorithm="auto"``, its
+        own lane resolution), but all plans share the process-wide executable
+        cache — same-shaped graphs (generated batches, R-MAT sweeps) compile
+        nothing after the first. The session's own graph reuses the session
+        plan.
+        """
+        results = []
+        for g in graphs:
+            if g is self.graph:
+                results.append(self.count())
+            else:
+                results.append(
+                    TriangleCounter(g, self.options, mesh=self.mesh).count()
+                )
+        return results
+
+    # -- per-vertex analysis, routed through the cached plan ---------------
+
+    def triangles_per_vertex(self) -> np.ndarray:
+        """(n,) int64 per-vertex triangle counts.
+
+        Replays the session plan's device buffers when the lane supports it
+        (filtered intersection, subgraph); other lanes fall back to a
+        filtered-intersection sidecar over the same widths. Either way the
+        result is memoized on the session and the executables live in the
+        engine's shared cache — no host-side re-enumeration per call.
+        """
+        if self._vertex_counts is None:
+            plan = self.plan
+            if not hasattr(plan, "triangles_per_vertex"):
+                t = _vertex_counts_sidecar(self.graph, self.options)
+            else:
+                try:
+                    t = plan.triangles_per_vertex()
+                except NotImplementedError:
+                    t = _vertex_counts_sidecar(self.graph, self.options)
+            self._vertex_counts = t
+        return self._vertex_counts.copy()
+
+    def clustering_coefficients(self) -> np.ndarray:
+        """cc[v] = 2·t(v) / (d(v)·(d(v)−1)); 0 where degree < 2."""
+        t = self.triangles_per_vertex().astype(np.float64)
+        d = self.graph.degrees.astype(np.float64)
+        denom = d * (d - 1.0)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            return np.where(denom > 0, 2.0 * t / denom, 0.0)
+
+    def transitivity(self) -> float:
+        """3 · #triangles / #wedges (= Σ t(v) / #wedges)."""
+        t = int(self.triangles_per_vertex().sum())
+        d = self.graph.degrees.astype(np.int64)
+        wedges = int((d * (d - 1) // 2).sum())
+        return float(t) / wedges if wedges else 0.0
+
+    def __repr__(self) -> str:
+        return (f"TriangleCounter(graph={self.graph.name!r}, "
+                f"algorithm={self.algorithm!r}, "
+                f"planned={self._plan is not None})")
+
+
+def _vertex_counts_sidecar(g: Graph, options: CountOptions) -> np.ndarray:
+    """Per-vertex counts for lanes whose plans carry no edge endpoints
+    (matrix, full-variant intersection, custom lanes): a filtered-intersection
+    plan over the same widths, sharing the cached ``"vertex"`` executables.
+    The plan's count executables are jit-lazy, so none compile here."""
+    plan = plan_triangle_count(
+        g, "intersection", variant="filtered", backend="jnp",
+        widths=options.widths,
+    )
+    return plan.triangles_per_vertex()

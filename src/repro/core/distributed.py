@@ -17,6 +17,12 @@ The same scheme shards the intersection method over edges. Communication
 volume is O(P) scalars total — triangle counting at 512 chips is bandwidth-
 free by construction, which the multi-pod dry-run (launch/dryrun.py --arch tc)
 verifies structurally.
+
+Both variants register with the algorithm registry as the
+``"matrix_distributed"`` / ``"intersection_distributed"`` lanes; the front
+door is ``TriangleCounter(g, CountOptions(algorithm="..._distributed"),
+mesh=mesh)``. The legacy ``triangle_count_*_distributed`` functions below are
+deprecated shims kept for source compatibility.
 """
 
 from __future__ import annotations
@@ -34,7 +40,13 @@ except ImportError:  # older jax ships it under experimental
     from jax.experimental.shard_map import shard_map
 
 from repro.graphs.formats import Graph
-from repro.core.engine import build_tile_schedule, prepare_intersection_buckets
+from repro.core.engine import (
+    DEFAULT_WIDTHS,
+    build_tile_schedule,
+    choose_block,
+    prepare_intersection_buckets,
+)
+from repro.core.registry import OneShotPlan, register_algorithm
 from repro.kernels.intersect.ops import intersect_counts, resolve_strategy
 
 __all__ = [
@@ -54,7 +66,7 @@ def _deal(arr: np.ndarray, ndev: int) -> np.ndarray:
     return arr[idx].reshape(ndev, tt // ndev, *arr.shape[1:])
 
 
-def triangle_count_matrix_distributed(
+def _matrix_distributed(
     g: Graph,
     mesh: Optional[Mesh] = None,
     *,
@@ -100,11 +112,11 @@ def triangle_count_matrix_distributed(
     return int(round(float(out)))
 
 
-def triangle_count_intersection_distributed(
+def _intersection_distributed(
     g: Graph,
     mesh: Optional[Mesh] = None,
     *,
-    widths: Sequence[int] = (8, 32, 128, 512),
+    widths: Sequence[int] = DEFAULT_WIDTHS,
     strategy: str = "auto",
 ) -> int:
     """Forward-algorithm TC with each degree bucket's edges sharded.
@@ -156,3 +168,78 @@ def triangle_count_intersection_distributed(
 
         total += int(count(jnp.asarray(u), jnp.asarray(v)))
     return total
+
+
+# ---------------------------------------------------------------------------
+# Registry planners + deprecated one-shot shims
+# ---------------------------------------------------------------------------
+
+def _planner_matrix(g: Graph, options, *, mesh=None) -> OneShotPlan:
+    """Registry planner for the ``"matrix_distributed"`` lane. Each count
+    re-shards the host-built schedule (one-shot semantics)."""
+    block = choose_block(g) if options.block == "auto" else int(options.block)
+    return OneShotPlan(
+        fn=lambda: _matrix_distributed(g, mesh, block=block),
+        algorithm="matrix_distributed",
+        meta=dict(graph=g.name, n=g.n, m=g.m_undirected, block=block),
+    )
+
+
+def _planner_intersection(g: Graph, options, *, mesh=None) -> OneShotPlan:
+    """Registry planner for the ``"intersection_distributed"`` lane."""
+    return OneShotPlan(
+        fn=lambda: _intersection_distributed(
+            g, mesh, widths=options.widths, strategy=options.strategy
+        ),
+        algorithm="intersection_distributed",
+        meta=dict(graph=g.name, n=g.n, m=g.m_undirected,
+                  widths=tuple(options.widths), strategy=options.strategy),
+    )
+
+
+register_algorithm("matrix_distributed", _planner_matrix)
+register_algorithm("intersection_distributed", _planner_intersection)
+
+
+def triangle_count_matrix_distributed(
+    g: Graph,
+    mesh: Optional[Mesh] = None,
+    *,
+    block: int = 128,
+) -> int:
+    """Deprecated shim: use ``TriangleCounter(g,
+    CountOptions(algorithm="matrix_distributed", block=...), mesh=mesh)``.
+    Returns the exact count as a Python int (unchanged behavior)."""
+    from repro.core.api import TriangleCounter, warn_deprecated
+    from repro.core.options import CountOptions
+
+    warn_deprecated(
+        "triangle_count_matrix_distributed(g, mesh, ...)",
+        'TriangleCounter(g, CountOptions(algorithm="matrix_distributed", '
+        "...), mesh=mesh).count()",
+    )
+    opts = CountOptions(algorithm="matrix_distributed", block=block)
+    return int(TriangleCounter(g, opts, mesh=mesh).count())
+
+
+def triangle_count_intersection_distributed(
+    g: Graph,
+    mesh: Optional[Mesh] = None,
+    *,
+    widths: Sequence[int] = DEFAULT_WIDTHS,
+    strategy: str = "auto",
+) -> int:
+    """Deprecated shim: use ``TriangleCounter(g,
+    CountOptions(algorithm="intersection_distributed", ...), mesh=mesh)``.
+    Returns the exact count as a Python int (unchanged behavior)."""
+    from repro.core.api import TriangleCounter, warn_deprecated
+    from repro.core.options import CountOptions
+
+    warn_deprecated(
+        "triangle_count_intersection_distributed(g, mesh, ...)",
+        'TriangleCounter(g, CountOptions(algorithm="intersection_distributed"'
+        ", ...), mesh=mesh).count()",
+    )
+    opts = CountOptions(algorithm="intersection_distributed",
+                        widths=tuple(widths), strategy=strategy)
+    return int(TriangleCounter(g, opts, mesh=mesh).count())

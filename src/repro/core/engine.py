@@ -66,6 +66,7 @@ from repro.graphs.formats import (
     orient_forward,
     to_block_sparse,
 )
+from repro.core.options import DEFAULT_WIDTHS, resolve_interpret
 from repro.kernels.intersect.ops import (
     STRATEGIES,
     choose_strategy,
@@ -88,8 +89,6 @@ __all__ = [
     "DEFAULT_WIDTHS",
     "STRATEGIES",
 ]
-
-DEFAULT_WIDTHS: Tuple[int, ...] = (8, 32, 128, 512)
 
 ALGORITHMS = ("intersection", "matrix", "subgraph")
 
@@ -117,11 +116,13 @@ def prepare_intersection_buckets(
         ``widths[-1]`` land in a final next-pow2 bucket.
 
     Returns:
-      A list of dicts ``{u_lists, v_lists, width}``, one per non-empty
-      degree-class bucket. ``u_lists``/``v_lists`` are (E_b, W_b) int32 numpy
-      arrays of sorted neighbor lists. Sentinel-padding rule: u rows pad with
-      ``n``, v rows with ``n + 1`` (never equal ⇒ padding contributes zero
-      matches); both sentinels sort above every real id, keeping rows sorted.
+      A list of dicts ``{u_lists, v_lists, src, dst, width}``, one per
+      non-empty degree-class bucket. ``u_lists``/``v_lists`` are (E_b, W_b)
+      int32 numpy arrays of sorted neighbor lists; ``src``/``dst`` are the
+      (E_b,) edge endpoints each row belongs to (per-vertex analysis scatters
+      through them). Sentinel-padding rule: u rows pad with ``n``, v rows
+      with ``n + 1`` (never equal ⇒ padding contributes zero matches); both
+      sentinels sort above every real id, keeping rows sorted.
     """
     if variant == "filtered":
         dag = orient_forward(g)
@@ -147,7 +148,8 @@ def prepare_intersection_buckets(
         u_lists = nbrs[b["src"]]
         v_lists = nbrs[b["dst"]].copy()
         v_lists[v_lists == g.n] = g.n + 1  # disjoint sentinel
-        out.append(dict(u_lists=u_lists, v_lists=v_lists, width=w))
+        out.append(dict(u_lists=u_lists, v_lists=v_lists,
+                        src=b["src"], dst=b["dst"], width=w))
     return out
 
 
@@ -313,6 +315,35 @@ def _build_matrix_executable(backend: str, interpret: bool) -> Callable:
     return run
 
 
+def _build_vertex_executable(n: int) -> Callable:
+    """Per-vertex triangle counts for one filtered-intersection bucket.
+
+    A probe-style (searchsorted) membership test marks which u-list entries
+    appear in both forward neighbor lists; each match (e, w) is one triangle
+    (src[e], dst[e], w), so three segment_sums attribute it to its three
+    vertices. Padding never matches (disjoint u/v sentinels), so the clip on
+    the scatter ids is safe.
+    """
+
+    @jax.jit
+    def run(u_lists, v_lists, src, dst):
+        def one(u, v):
+            pos = jnp.clip(jnp.searchsorted(v, u), 0, v.shape[0] - 1)
+            return v[pos] == u
+
+        matched = jax.vmap(one)(u_lists, v_lists)  # (E, W) bool
+        per_edge = matched.sum(axis=1, dtype=jnp.int32)
+        t = jax.ops.segment_sum(per_edge, src, num_segments=n)
+        t = t + jax.ops.segment_sum(per_edge, dst, num_segments=n)
+        w_ids = jnp.clip(u_lists.reshape(-1), 0, n - 1)
+        t = t + jax.ops.segment_sum(
+            matched.reshape(-1).astype(jnp.int32), w_ids, num_segments=n
+        )
+        return t
+
+    return run
+
+
 def get_executable(algorithm: str, backend: str, interpret: bool,
                    shape_key: tuple, strategy: Optional[str] = None,
                    bitmap_bits: Optional[int] = None) -> Callable:
@@ -321,20 +352,23 @@ def get_executable(algorithm: str, backend: str, interpret: bool,
 
     Args:
       algorithm: "intersection" | "subgraph" (both use the intersection
-        executables) | "matrix".
+        executables) | "matrix" | "vertex" (per-vertex triangle counts for
+        one filtered bucket — the analysis path ``TriangleCounter`` routes
+        through the plan).
       backend: "jnp" | "pallas" | "ref" (see ``repro.kernels.*.ops``).
       interpret: pallas interpret mode flag (part of the key: interpret and
         compiled kernels are distinct executables).
       shape_key: the work unit's static array shape, e.g. one degree bucket's
-        (E, W) or one tile schedule's (T, B, B).
+        (E, W), a tile schedule's (T, B, B), or a vertex stage's (E, W, n).
       strategy: resolved set-intersection strategy ("broadcast" | "probe" |
-        "bitmap") for the intersection lanes; None for matrix.
+        "bitmap") for the intersection lanes; None for matrix/vertex.
       bitmap_bits: static packed-bitmap capacity when strategy="bitmap",
         else None.
 
     Returns:
-      A jitted callable summing the work unit to a scalar. Cached process-wide
-      under ``(algorithm, strategy, backend, interpret, bitmap_bits, shape)``
+      A jitted callable reducing the work unit (a scalar count, or an (n,)
+      per-vertex vector for "vertex"). Cached process-wide under
+      ``(algorithm, strategy, backend, interpret, bitmap_bits, shape)``
       so plans over same-shaped buckets/schedules share the compiled kernel.
     """
     if backend not in ("jnp", "pallas", "ref"):
@@ -355,6 +389,8 @@ def get_executable(algorithm: str, backend: str, interpret: bool,
                                          bitmap_bits)
     elif algorithm == "matrix":
         fn = _build_matrix_executable(backend, interpret)
+    elif algorithm == "vertex":
+        fn = _build_vertex_executable(int(shape_key[-1]))
     else:
         raise ValueError(f"unknown algorithm {algorithm!r}")
     _EXECUTABLE_CACHE[key] = fn
@@ -383,6 +419,9 @@ class _Stage:
     shape_key: tuple
     strategy: Optional[str] = None  # resolved intersection strategy
     bitmap_bits: Optional[int] = None  # packed capacity when strategy="bitmap"
+    # (src, dst) edge endpoints, device-resident — filtered intersection
+    # stages only; lets the per-vertex analysis path replay the same buffers
+    vertex_args: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
 
 
 @dataclasses.dataclass
@@ -436,6 +475,45 @@ class TrianglePlan:
             stats["num_embeddings"] = 6 * c
         return c, stats
 
+    def triangles_per_vertex(self) -> np.ndarray:
+        """Per-vertex triangle counts, replayed through this plan's cached
+        device buffers (the analysis path ``repro.core.api.TriangleCounter``
+        routes here instead of the host-side enumeration in ``listing.py``).
+
+        Supported on plans whose stages carry edge endpoints — the filtered
+        intersection lane and the subgraph lane (whose counts on the pruned
+        graph scatter back through ``meta["vertex_map"]``; peeled vertices
+        are in no triangle by construction).
+
+        Returns:
+          (n,) int64 numpy array, t[v] = number of triangles containing v.
+
+        Raises:
+          NotImplementedError: matrix lane or the full intersection variant
+            (no per-edge endpoints to attribute matches to); callers fall
+            back to a filtered-intersection sidecar plan.
+        """
+        if self.algorithm not in ("intersection", "subgraph") \
+                or self.divisor != 1 \
+                or any(st.vertex_args is None for st in self.stages):
+            raise NotImplementedError(
+                f"per-vertex counts need filtered-intersection stages; "
+                f"algorithm={self.algorithm!r} divisor={self.divisor} does "
+                f"not carry them"
+            )
+        n_local = int(self.meta.get("vertex_n", self.meta["n"]))
+        total = np.zeros(n_local, dtype=np.int64)
+        for st in self.stages:
+            e, w = st.shape_key
+            fn = get_executable("vertex", "jnp", False, (e, w, n_local))
+            total += np.asarray(fn(*st.args, *st.vertex_args), dtype=np.int64)
+        vertex_map = self.meta.get("vertex_map")
+        if vertex_map is not None:  # subgraph lane: pruned ids -> original
+            out = np.zeros(int(self.meta["n"]), dtype=np.int64)
+            out[np.asarray(vertex_map)] = total
+            return out
+        return total
+
     def block_until_ready(self) -> "TrianglePlan":
         """Force all device buffers resident (useful before timing counts)."""
         for st in self.stages:
@@ -453,8 +531,9 @@ class TrianglePlan:
 
 
 def _plan_intersection(g: Graph, variant: str, backend: str, interpret: bool,
-                       widths: Sequence[int],
-                       strategy: str = "auto") -> Tuple[List[_Stage], int, dict]:
+                       widths: Sequence[int], strategy: str = "auto",
+                       bitmap_bits: Optional[int] = None,
+                       ) -> Tuple[List[_Stage], int, dict]:
     buckets = prepare_intersection_buckets(g, variant=variant, widths=widths)
     # id range covers real vertex ids [0, n) plus the in-row padding
     # sentinels n (u rows) and n+1 (v rows)
@@ -463,14 +542,26 @@ def _plan_intersection(g: Graph, variant: str, backend: str, interpret: bool,
     for b in buckets:
         shape_key = tuple(b["u_lists"].shape)
         strat, bits = resolve_strategy(b["width"], id_range, strategy=strategy)
+        if bitmap_bits is not None and strat == "bitmap":
+            if bitmap_bits < id_range:
+                raise ValueError(
+                    f"bitmap_bits={bitmap_bits} cannot represent id range "
+                    f"{id_range} (n + 2 sentinel ids); ids past the capacity "
+                    f"would silently never match"
+                )
+            bits = int(bitmap_bits)
         fn = get_executable("intersection", backend, interpret, shape_key,
                             strategy=strat, bitmap_bits=bits)
+        vertex_args = None
+        if variant == "filtered":
+            vertex_args = (jnp.asarray(b["src"]), jnp.asarray(b["dst"]))
         stages.append(_Stage(
             executable=fn,
             args=(jnp.asarray(b["u_lists"]), jnp.asarray(b["v_lists"])),
             shape_key=shape_key,
             strategy=strat,
             bitmap_bits=bits,
+            vertex_args=vertex_args,
         ))
     meta = dict(
         variant=variant,
@@ -504,15 +595,16 @@ def _plan_matrix(g: Graph, block, permute: bool, backend: str,
 
 
 def _plan_subgraph(g: Graph, backend: str, interpret: bool,
-                   widths: Sequence[int],
-                   strategy: str = "auto") -> Tuple[List[_Stage], int, dict]:
+                   widths: Sequence[int], strategy: str = "auto",
+                   bitmap_bits: Optional[int] = None,
+                   ) -> Tuple[List[_Stage], int, dict]:
     alive = peel_to_two_core(g)
-    sub, _ = induced_subgraph(g, alive)
+    sub, old_ids = induced_subgraph(g, alive)
     # join on the pruned graph; forward-filtered intersection counts each
     # triangle once (embeddings = 6 × that)
     stages, _, inner = _plan_intersection(
         sub, variant="filtered", backend=backend, interpret=interpret,
-        widths=widths, strategy=strategy,
+        widths=widths, strategy=strategy, bitmap_bits=bitmap_bits,
     )
     # subgraph stages share the intersection executables by construction
     meta = dict(
@@ -520,6 +612,10 @@ def _plan_subgraph(g: Graph, backend: str, interpret: bool,
         prune_fraction=float(1.0 - alive.sum() / max(g.n, 1)),
         edges_after=sub.m_undirected,
         edges_before=g.m_undirected,
+        # per-vertex analysis: stage counts are on the pruned graph's ids;
+        # scatter back through old_ids (peeled vertices hold no triangles)
+        vertex_n=sub.n,
+        vertex_map=np.asarray(old_ids),
         **inner,
     )
     return stages, 1, meta
@@ -530,12 +626,13 @@ def plan_triangle_count(
     algorithm: str = "intersection",
     *,
     backend: str = "jnp",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     variant: str = "filtered",
     widths: Sequence[int] = DEFAULT_WIDTHS,
     strategy: str = "auto",
     block="auto",
     permute: bool = True,
+    bitmap_bits: Optional[int] = None,
 ) -> TrianglePlan:
     """Run the host stage once and return a device-resident ``TrianglePlan``.
 
@@ -543,7 +640,9 @@ def plan_triangle_count(
       g: the input ``Graph`` (undirected simple CSR).
       algorithm: "intersection" | "matrix" | "subgraph".
       backend: "jnp" | "pallas" | "ref" per-kernel execution path.
-      interpret: pallas interpret mode (True runs kernel bodies on CPU).
+      interpret: pallas interpret mode (True runs kernel bodies on CPU);
+        None (default) resolves to ``repro.core.options.DEFAULT_INTERPRET``
+        (the ``TC_INTERPRET`` env var, unset ⇒ True).
       variant: intersection lane only — "filtered" (forward algorithm) or
         "full" (every directed edge, each triangle found 6×).
       widths: degree-class bucket widths for the intersection/subgraph lanes.
@@ -553,22 +652,27 @@ def plan_triangle_count(
         "probe" | "bitmap" override applied to every bucket.
       block: matrix lane tile size, or "auto" (``choose_block``).
       permute: matrix lane degree permutation toggle.
+      bitmap_bits: optional forced packed capacity for bitmap-strategy
+        buckets (must cover the graph's id range ``n + 2``); None sizes it
+        via ``resolve_strategy``.
 
     Returns:
       A ``TrianglePlan`` whose ``count()`` replays the device stage only.
-      The per-algorithm keyword arguments match the one-shot
-      ``triangle_count_*`` entry points (thin wrappers over this function).
+      The per-algorithm keyword arguments match ``CountOptions``; the
+      facade (``repro.core.api.TriangleCounter``) and the deprecated
+      one-shot ``triangle_count_*`` shims both route here.
     """
+    interpret = resolve_interpret(interpret)
     t0 = time.perf_counter()
     if algorithm == "intersection":
         stages, divisor, meta = _plan_intersection(
-            g, variant, backend, interpret, widths, strategy
+            g, variant, backend, interpret, widths, strategy, bitmap_bits
         )
     elif algorithm == "matrix":
         stages, divisor, meta = _plan_matrix(g, block, permute, backend, interpret)
     elif algorithm == "subgraph":
         stages, divisor, meta = _plan_subgraph(g, backend, interpret, widths,
-                                               strategy)
+                                               strategy, bitmap_bits)
     else:
         raise ValueError(
             f"unknown algorithm {algorithm!r}; expected one of {ALGORITHMS}"

@@ -6,6 +6,13 @@ This module provides those on top of the forward-oriented intersection
 machinery: the (E, W_u, W_v) match tensor that the counting kernels reduce is
 instead materialized per bucket and scattered into triple lists / per-vertex
 and per-edge accumulators.
+
+These are host-side *enumeration* paths (they materialize triangle lists —
+needed by ``k_truss``/``edge_support``). For per-vertex analysis that only
+needs counts, prefer the facade: ``TriangleCounter.triangles_per_vertex()``
+(and ``clustering_coefficients`` / ``transitivity`` there) replays the
+session plan's cached device buffers through the engine's executable cache
+instead of re-running this module's numpy enumeration.
 """
 
 from __future__ import annotations

@@ -1,0 +1,197 @@
+"""Typed options for the triangle-counting front door.
+
+``CountOptions`` consolidates every tuning knob that used to be scattered as
+free-function kwargs (``algorithm``, ``variant``, ``backend``, ``interpret``,
+``strategy``, ``widths``, ``block``, ``permute``, ``bitmap_bits``) into one
+frozen, validated, hashable dataclass. The engine's process-wide executable
+cache is keyed by fields derived from these options (see
+``docs/ARCHITECTURE.md`` §Executable-cache keying rules), so *equal options
+imply equal cache keys*: two ``TriangleCounter`` sessions built from equal
+``CountOptions`` over same-shaped graphs share every compiled executable.
+
+``DEFAULT_INTERPRET`` is the single source of truth for the pallas
+interpret-mode default. It is resolved ONCE at import from the
+``TC_INTERPRET`` environment variable (unset ⇒ ``True``, the CPU-safe
+default; ``TC_INTERPRET=0`` ⇒ ``False`` for real-accelerator runs), replacing
+the per-function ``interpret=True`` defaults that made real-GPU runs pay
+interpreter mode by accident. Every entry point now takes ``interpret=None``
+meaning "use ``DEFAULT_INTERPRET``"; pass an explicit bool to override.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Tuple, Union
+
+__all__ = [
+    "BACKENDS",
+    "CountOptions",
+    "DEFAULT_INTERPRET",
+    "DEFAULT_WIDTHS",
+    "VARIANTS",
+    "resolve_interpret",
+]
+
+DEFAULT_WIDTHS: Tuple[int, ...] = (8, 32, 128, 512)
+
+VARIANTS = ("filtered", "full")
+BACKENDS = ("jnp", "pallas", "ref")
+
+_FALSY = ("0", "false", "no", "off", "")
+
+
+def _resolve_default_interpret() -> bool:
+    """Read ``TC_INTERPRET`` once; unset means True (CPU-safe)."""
+    raw = os.environ.get("TC_INTERPRET")
+    if raw is None:
+        return True
+    return raw.strip().lower() not in _FALSY
+
+
+DEFAULT_INTERPRET: bool = _resolve_default_interpret()
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None ⇒ the process-wide ``DEFAULT_INTERPRET``; else the explicit bool."""
+    return DEFAULT_INTERPRET if interpret is None else bool(interpret)
+
+
+@dataclasses.dataclass(frozen=True)
+class CountOptions:
+    """Every knob of a triangle count, validated at construction.
+
+    Attributes:
+      algorithm: "auto" (cross-lane cost model, see
+        ``repro.core.registry.choose_algorithm``) or a registered lane name —
+        "intersection" | "matrix" | "subgraph" | "intersection_distributed" |
+        "matrix_distributed".
+      variant: intersection lane — "filtered" (forward algorithm, each
+        triangle once) or "full" (every directed edge, found 6×).
+      backend: "jnp" | "pallas" | "ref" per-kernel execution path.
+      interpret: pallas interpret mode; None (default) resolves to
+        ``DEFAULT_INTERPRET`` (the ``TC_INTERPRET`` env var).
+      strategy: intersection/subgraph lanes — per-bucket set-intersection
+        core: "auto" (documented cost model) or forced "broadcast" |
+        "probe" | "bitmap".
+      widths: ascending degree-class bucket widths for the
+        intersection/subgraph lanes.
+      block: matrix lane tile size (int) or "auto" (``choose_block``).
+      permute: matrix lane degree-permutation toggle.
+      bitmap_bits: optional forced packed-bitmap capacity (multiple of 32)
+        for bitmap-strategy buckets; None (default) sizes it from the
+        bucket's id range via ``resolve_strategy``.
+
+    Frozen ⇒ hashable: equal options hash equal, and the engine's
+    executable-cache keys are functions of these fields, so equal options
+    share cached executables. ``key()`` returns the normalized hashable
+    tuple (with ``interpret=None`` resolved) used wherever options
+    participate in a cache key.
+    """
+
+    algorithm: str = "auto"
+    variant: str = "filtered"
+    backend: str = "jnp"
+    interpret: Optional[bool] = None
+    strategy: str = "auto"
+    widths: Tuple[int, ...] = DEFAULT_WIDTHS
+    block: Union[int, str] = "auto"
+    permute: bool = True
+    bitmap_bits: Optional[int] = None
+
+    def __post_init__(self):
+        # normalize widths to a tuple of ints so the dataclass stays hashable
+        try:
+            widths = tuple(int(w) for w in self.widths)
+        except TypeError:
+            raise ValueError(f"widths must be an iterable of ints, "
+                             f"got {self.widths!r}") from None
+        object.__setattr__(self, "widths", widths)
+
+        if self.algorithm != "auto":
+            from repro.core.registry import available_algorithms
+            names = available_algorithms()
+            if self.algorithm not in names:
+                raise ValueError(
+                    f"unknown algorithm {self.algorithm!r}; expected 'auto' "
+                    f"or one of {names}"
+                )
+        if self.variant not in VARIANTS:
+            raise ValueError(
+                f"unknown variant {self.variant!r}; expected one of {VARIANTS}"
+            )
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of {BACKENDS}"
+            )
+        if self.interpret is not None and not isinstance(self.interpret, bool):
+            raise ValueError(
+                f"interpret must be None or a bool, got {self.interpret!r}"
+            )
+        from repro.kernels.intersect.ops import BITMAP_MAX_BITS, STRATEGIES
+        if self.strategy != "auto" and self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; expected 'auto' or one "
+                f"of {STRATEGIES}"
+            )
+        if not widths or any(w <= 0 for w in widths) or \
+                any(a >= b for a, b in zip(widths, widths[1:])):
+            raise ValueError(
+                f"widths must be non-empty, positive, strictly ascending; "
+                f"got {widths}"
+            )
+        if self.block != "auto":
+            if not isinstance(self.block, int) or isinstance(self.block, bool) \
+                    or self.block <= 0:
+                raise ValueError(
+                    f"block must be a positive int or 'auto', got {self.block!r}"
+                )
+        if not isinstance(self.permute, bool):
+            raise ValueError(f"permute must be a bool, got {self.permute!r}")
+        if self.bitmap_bits is not None:
+            b = self.bitmap_bits
+            if not isinstance(b, int) or isinstance(b, bool) or b <= 0 \
+                    or b % 32 or b > BITMAP_MAX_BITS:
+                raise ValueError(
+                    f"bitmap_bits must be a positive multiple of 32 ≤ "
+                    f"{BITMAP_MAX_BITS}, got {b!r}"
+                )
+
+    @property
+    def resolved_interpret(self) -> bool:
+        """The concrete interpret flag (``None`` ⇒ ``DEFAULT_INTERPRET``)."""
+        return resolve_interpret(self.interpret)
+
+    def key(self) -> tuple:
+        """Normalized hashable identity: the fields the engine's executable
+        cache keys derive from, with ``interpret=None`` resolved — so options
+        differing only in explicit-vs-default interpret hash alike."""
+        return (
+            self.algorithm, self.variant, self.backend,
+            self.resolved_interpret, self.strategy, self.widths,
+            self.block, self.permute, self.bitmap_bits,
+        )
+
+    def replace(self, **changes) -> "CountOptions":
+        """A copy with ``changes`` applied (re-validated)."""
+        return dataclasses.replace(self, **changes)
+
+    def plan_kwargs(self, lane: str) -> dict:
+        """The ``plan_triangle_count`` kwargs this lane consumes.
+
+        Lanes ignore knobs that do not apply to them (the matrix lane has no
+        ``widths``; the intersection lane no ``block``), so one options
+        object can drive ``algorithm="auto"`` across all lanes.
+        """
+        if lane == "intersection":
+            return dict(variant=self.variant, backend=self.backend,
+                        interpret=self.interpret, widths=self.widths,
+                        strategy=self.strategy, bitmap_bits=self.bitmap_bits)
+        if lane == "subgraph":
+            return dict(backend=self.backend, interpret=self.interpret,
+                        widths=self.widths, strategy=self.strategy,
+                        bitmap_bits=self.bitmap_bits)
+        if lane == "matrix":
+            return dict(backend=self.backend, interpret=self.interpret,
+                        block=self.block, permute=self.permute)
+        raise ValueError(f"unknown engine lane {lane!r}")

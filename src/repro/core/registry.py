@@ -1,0 +1,183 @@
+"""Algorithm registry + the cross-lane ``algorithm="auto"`` cost model.
+
+The paper's central result is *comparative*: no formulation wins everywhere,
+so lane choice is a tunable of one system (as TRUST, arXiv:2103.08053, and
+the GraphChallenge survey, arXiv:2003.09269, treat it), not three separate
+entry points. Each lane registers a *planner* here —
+``planner(g, options, *, mesh=None) -> plan-like`` where plan-like exposes
+``count()``, ``meta``, and ``prep_seconds`` (a ``TrianglePlan``, or a
+``OneShotPlan`` adapter for the distributed variants) — and the facade
+(``repro.core.api.TriangleCounter``) looks lanes up by name.
+
+``choose_algorithm(g)`` is the documented ``algorithm="auto"`` cost model,
+anchored to the paper's figures and calibrated on this repo's dataset
+registry (see the rule list on ``_default_chooser``). It is overridable:
+``set_auto_chooser(fn)`` swaps the heuristic process-wide (returning the
+previous one), and the chosen lane is always surfaced in
+``CountResult.algorithm``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+__all__ = [
+    "OneShotPlan",
+    "available_algorithms",
+    "choose_algorithm",
+    "get_algorithm",
+    "register_algorithm",
+    "set_auto_chooser",
+]
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register_algorithm(name: str, planner: Callable, *,
+                       overwrite: bool = False) -> None:
+    """Register a lane under ``name``.
+
+    Args:
+      name: lane name ``CountOptions(algorithm=...)`` selects.
+      planner: ``planner(g, options, *, mesh=None)`` returning a plan-like
+        object (``count()`` + ``meta`` + ``prep_seconds``).
+      overwrite: allow replacing an existing registration (default False —
+        accidental double registration raises).
+    """
+    if not name or not isinstance(name, str):
+        raise ValueError(f"algorithm name must be a non-empty str, got {name!r}")
+    if not callable(planner):
+        raise ValueError(f"planner for {name!r} must be callable")
+    if not overwrite and name in _REGISTRY and _REGISTRY[name] is not planner:
+        raise ValueError(f"algorithm {name!r} is already registered; "
+                         f"pass overwrite=True to replace it")
+    _REGISTRY[name] = planner
+
+
+def _ensure_builtin() -> None:
+    """Import the builtin lane modules so their registrations have run
+    (each registers at import; ``repro.core`` imports them all, but the
+    registry must also work when imported standalone)."""
+    import repro.core.tc_intersection  # noqa: F401
+    import repro.core.tc_matrix  # noqa: F401
+    import repro.core.tc_subgraph  # noqa: F401
+    import repro.core.distributed  # noqa: F401
+
+
+def get_algorithm(name: str) -> Callable:
+    """The registered planner for ``name``; ValueError lists what exists."""
+    _ensure_builtin()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown algorithm {name!r}; registered: {available_algorithms()}"
+        ) from None
+
+
+def available_algorithms() -> tuple:
+    """Sorted names of every registered lane."""
+    _ensure_builtin()
+    return tuple(sorted(_REGISTRY))
+
+
+@dataclasses.dataclass
+class OneShotPlan:
+    """Adapter giving non-engine lanes (the distributed variants) the
+    ``TrianglePlan`` surface the facade consumes: ``count()`` re-runs the
+    wrapped callable each time (host stage included — these lanes shard the
+    host-built schedule fresh per count), ``meta``/``prep_seconds``/
+    ``executions`` mirror the plan fields."""
+
+    fn: Callable[[], int]
+    algorithm: str
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    prep_seconds: float = 0.0
+    executions: int = 0
+
+    def count(self) -> int:
+        out = int(self.fn())
+        self.executions += 1
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The algorithm="auto" cost model
+# ---------------------------------------------------------------------------
+
+# Calibrated on the Table-1 analogue registry (graphs/datasets.py) and the
+# generator suite: mesh-like graphs (road-like, grids) sit at max degree ≤ 10
+# with skew (= max/avg degree) ≤ ~2; scale-free graphs (R-MAT families) at
+# skew ≥ 12; only the dense complete-graph fixtures reach density ≥ 0.25.
+MESH_MAX_DEGREE = 12
+MESH_MAX_SKEW = 3.0
+DENSE_MIN_DENSITY = 0.25
+DENSE_MAX_N = 512
+
+
+def _default_chooser(g) -> str:
+    """Pick a lane from graph shape. Documented contract:
+
+    1. **matrix** when the graph is small and dense (density ≥ 0.25,
+       n ≤ 512): the degree-permuted adjacency fills whole MXU tiles, the
+       one regime where the paper's ~20× SpGEMM constant (Fig. 6) is paid
+       over saturated matmuls instead of empty lanes.
+    2. **subgraph** when the graph is mesh-like — max degree ≤ 12 AND
+       degree skew (max/avg) ≤ 3 — the paper's 'rm' class (road_central),
+       where Fig. 5 shows the SM filter winning: leaf cascades collapse
+       under the 2-core peel before any intersection runs.
+    3. **intersection** otherwise — the paper's overall winner (Fig. 5:
+       fastest on every scale-free graph, thanks to its filtering steps).
+
+    The id-range heuristic the bitmap core depends on operates one level
+    down: *within* the intersection/subgraph lanes, ``choose_strategy``
+    hands dense-id buckets to the packed-bitmap kernel (see
+    ``repro.kernels.intersect.ops``), so lane choice here never needs it.
+
+    Never returns a distributed lane — those need an explicit mesh, so they
+    are opt-in by name.
+    """
+    n, m, dmax = g.n, g.m_undirected, g.max_degree
+    if n < 3 or m == 0:
+        return "intersection"
+    avg_deg = 2.0 * m / n
+    density = 2.0 * m / (n * (n - 1)) if n > 1 else 0.0
+    skew = dmax / max(avg_deg, 1e-9)
+    if density >= DENSE_MIN_DENSITY and n <= DENSE_MAX_N:
+        return "matrix"
+    if dmax <= MESH_MAX_DEGREE and skew <= MESH_MAX_SKEW:
+        return "subgraph"
+    return "intersection"
+
+
+_CHOOSER: Callable = _default_chooser
+
+
+def choose_algorithm(g) -> str:
+    """Resolve ``algorithm="auto"`` for graph ``g`` via the current chooser
+    (the documented ``_default_chooser`` unless ``set_auto_chooser`` swapped
+    it). Always returns a registered single-host lane name."""
+    lane = _CHOOSER(g)
+    _ensure_builtin()
+    if lane not in _REGISTRY:
+        raise ValueError(
+            f"auto chooser returned unregistered lane {lane!r}; "
+            f"registered: {available_algorithms()}"
+        )
+    return lane
+
+
+def set_auto_chooser(chooser: Optional[Callable] = None) -> Callable:
+    """Override the ``algorithm="auto"`` heuristic process-wide.
+
+    Args:
+      chooser: ``chooser(g) -> lane name``, or None to restore the default.
+
+    Returns:
+      The previously active chooser (so callers can restore it).
+    """
+    global _CHOOSER
+    previous = _CHOOSER
+    _CHOOSER = chooser if chooser is not None else _default_chooser
+    return previous

@@ -17,13 +17,16 @@ Pipeline (host numpy prep → JAX compute):
 (intersect over ALL directed edges with full neighbor lists; each triangle is
 then found 6×), so benchmarks can measure exactly what the filtering buys.
 
-This module is a thin wrapper over the plan/execute engine
-(:mod:`repro.core.engine`): one-shot counting builds a ``TrianglePlan`` and
-executes it once. Hold the plan (``plan_triangle_count``) to amortize the
-host stage across repeated counts.
+This module registers the ``"intersection"`` lane with the algorithm registry
+(:mod:`repro.core.registry`); the front door is
+``TriangleCounter(g, CountOptions(algorithm="intersection", ...))``. The
+one-shot ``triangle_count_intersection`` below is a deprecated shim kept for
+source compatibility.
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 from repro.graphs.formats import Graph
 from repro.core.engine import (
@@ -31,8 +34,19 @@ from repro.core.engine import (
     plan_triangle_count,
     prepare_intersection_buckets,  # re-export (prep now lives in the engine)
 )
+from repro.core.registry import register_algorithm
 
 __all__ = ["triangle_count_intersection", "prepare_intersection_buckets"]
+
+
+def _planner(g: Graph, options, *, mesh=None):
+    """Registry planner: CountOptions → intersection-lane TrianglePlan."""
+    return plan_triangle_count(
+        g, "intersection", **options.plan_kwargs("intersection")
+    )
+
+
+register_algorithm("intersection", _planner)
 
 
 def triangle_count_intersection(
@@ -40,28 +54,28 @@ def triangle_count_intersection(
     *,
     variant: str = "filtered",
     backend: str = "jnp",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     widths=DEFAULT_WIDTHS,
     strategy: str = "auto",
 ) -> int:
-    """Exact triangle count via batched set intersection.
+    """Deprecated shim: exact triangle count via batched set intersection.
 
-    Args:
-      g: undirected simple ``Graph``.
-      variant: "filtered" — forward algorithm (each triangle counted once);
-        "full" — Green-et-al.-style full edge list (counted 6×).
-      backend: "jnp" (pure-jnp cores), "pallas" (TPU kernels), "ref" (oracle).
-      interpret: pallas interpret mode.
-      widths: degree-class bucket widths.
-      strategy: per-bucket set-intersection core — "auto" (default cost
-        model) or forced "broadcast" | "probe" | "bitmap"; see
-        ``repro.kernels.intersect.ops``.
+    Use ``TriangleCounter(g, CountOptions(algorithm="intersection", ...))``
+    instead. Keyword arguments map 1:1 onto ``CountOptions`` fields
+    (``interpret=None`` now means the process-wide ``DEFAULT_INTERPRET``).
 
     Returns:
-      The exact triangle count as a Python int.
+      The exact triangle count as a Python int (unchanged behavior).
     """
-    plan = plan_triangle_count(
-        g, "intersection", variant=variant, backend=backend,
-        interpret=interpret, widths=widths, strategy=strategy,
+    from repro.core.api import TriangleCounter, warn_deprecated
+    from repro.core.options import CountOptions
+
+    warn_deprecated(
+        "triangle_count_intersection(g, ...)",
+        'TriangleCounter(g, CountOptions(algorithm="intersection", ...)).count()',
     )
-    return plan.count()
+    opts = CountOptions(
+        algorithm="intersection", variant=variant, backend=backend,
+        interpret=interpret, widths=tuple(widths), strategy=strategy,
+    )
+    return int(TriangleCounter(g, opts).count())

@@ -26,13 +26,15 @@ wedge, which lands in the strict upper triangle after the degree permutation).
 Degenerate diagonal tiles (I == J) carry both L and U nonzeros; they are
 handled naturally because L/U tiles are built from the strict parts.
 
-This module is a thin wrapper over the plan/execute engine: one-shot counting
-builds a ``TrianglePlan`` (host tile schedule → device-resident tiles +
-compiled fused kernel) and executes it once. Hold the plan to amortize the
-schedule across repeated counts.
+This module registers the ``"matrix"`` lane with the algorithm registry; the
+front door is ``TriangleCounter(g, CountOptions(algorithm="matrix", ...))``.
+The one-shot ``triangle_count_matrix`` below is a deprecated shim kept for
+source compatibility.
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 from repro.graphs.formats import Graph
 from repro.core.engine import (
@@ -40,8 +42,17 @@ from repro.core.engine import (
     choose_block,  # re-export
     plan_triangle_count,
 )
+from repro.core.registry import register_algorithm
 
 __all__ = ["triangle_count_matrix", "build_tile_schedule", "choose_block"]
+
+
+def _planner(g: Graph, options, *, mesh=None):
+    """Registry planner: CountOptions → matrix-lane TrianglePlan."""
+    return plan_triangle_count(g, "matrix", **options.plan_kwargs("matrix"))
+
+
+register_algorithm("matrix", _planner)
 
 
 def triangle_count_matrix(
@@ -50,11 +61,24 @@ def triangle_count_matrix(
     block=128,  # int or "auto" (adaptive — see choose_block)
     permute: bool = True,
     backend: str = "jnp",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> int:
-    """Exact triangle count via fused masked block-SpGEMM."""
-    plan = plan_triangle_count(
-        g, "matrix", block=block, permute=permute, backend=backend,
+    """Deprecated shim: exact triangle count via fused masked block-SpGEMM.
+
+    Use ``TriangleCounter(g, CountOptions(algorithm="matrix", ...))``
+    instead; ``interpret=None`` now means the process-wide
+    ``DEFAULT_INTERPRET``. Returns the exact count as a Python int
+    (unchanged behavior).
+    """
+    from repro.core.api import TriangleCounter, warn_deprecated
+    from repro.core.options import CountOptions
+
+    warn_deprecated(
+        "triangle_count_matrix(g, ...)",
+        'TriangleCounter(g, CountOptions(algorithm="matrix", ...)).count()',
+    )
+    opts = CountOptions(
+        algorithm="matrix", block=block, permute=permute, backend=backend,
         interpret=interpret,
     )
-    return plan.count()
+    return int(TriangleCounter(g, opts).count())

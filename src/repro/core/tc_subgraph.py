@@ -21,15 +21,17 @@ JOIN: candidate edges are joined under the triangle's intersection rule —
   (all 6 automorphisms per triangle, as a real subgraph matcher must);
   ``triangle_count_subgraph`` divides by |Aut(K₃)| = 6.
 
-The unlabeled count is a thin wrapper over the plan/execute engine: filter +
-reconstruct + bucket setup run once at plan time, and the join replays on
-device. ``subgraph_match_triangle`` handles labeled queries, which carry
+This module registers the ``"subgraph"`` lane with the algorithm registry;
+the front door is ``TriangleCounter(g, CountOptions(algorithm="subgraph"))``
+(filter + reconstruct + bucket setup run once at plan time, the join replays
+on device). The one-shot ``triangle_count_subgraph`` below is a deprecated
+shim. ``subgraph_match_triangle`` handles labeled queries, which carry
 per-query candidate-edge masks and so stay one-shot.
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -40,6 +42,8 @@ from repro.core.engine import (
     peel_to_two_core,  # re-export (prep now lives in the engine)
     plan_triangle_count,
 )
+from repro.core.options import resolve_interpret
+from repro.core.registry import register_algorithm
 
 __all__ = [
     "peel_to_two_core",
@@ -48,19 +52,41 @@ __all__ = [
 ]
 
 
+def _planner(g: Graph, options, *, mesh=None):
+    """Registry planner: CountOptions → subgraph-lane TrianglePlan."""
+    return plan_triangle_count(g, "subgraph", **options.plan_kwargs("subgraph"))
+
+
+register_algorithm("subgraph", _planner)
+
+
 def triangle_count_subgraph(
     g: Graph,
     *,
     backend: str = "jnp",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     return_stats: bool = False,
 ):
-    """Exact TC via filter(2-core-peel) + reform + join-by-intersection."""
-    plan = plan_triangle_count(
-        g, "subgraph", backend=backend, interpret=interpret
+    """Deprecated shim: exact TC via filter(2-core-peel) + reform + join.
+
+    Use ``TriangleCounter(g, CountOptions(algorithm="subgraph", ...))``
+    instead — ``CountResult.meta`` carries the stats ``return_stats=True``
+    returns here. ``interpret=None`` now means the process-wide
+    ``DEFAULT_INTERPRET``. Return values are unchanged: an int, or
+    ``(int, stats dict)`` with ``return_stats=True``.
+    """
+    from repro.core.api import TriangleCounter, warn_deprecated
+    from repro.core.options import CountOptions
+
+    warn_deprecated(
+        "triangle_count_subgraph(g, ...)",
+        'TriangleCounter(g, CountOptions(algorithm="subgraph", ...)).count()',
     )
+    opts = CountOptions(algorithm="subgraph", backend=backend,
+                        interpret=interpret)
+    result = TriangleCounter(g, opts).count()
     if return_stats:
-        count, meta = plan.count_with_stats()
+        meta = result.meta
         stats = dict(
             vertices_pruned=meta["vertices_pruned"],
             prune_fraction=meta["prune_fraction"],
@@ -68,8 +94,8 @@ def triangle_count_subgraph(
             edges_before=meta["edges_before"],
             num_embeddings=meta["num_embeddings"],
         )
-        return count, stats
-    return plan.count()
+        return result.count, stats
+    return result.count
 
 
 def subgraph_match_triangle(
@@ -78,15 +104,18 @@ def subgraph_match_triangle(
     query_labels: Tuple[int, int, int],
     *,
     backend: str = "jnp",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> int:
     """Count embeddings of a *labeled* triangle query (the generality the
     paper highlights for the SM formulation: 'find the embeddings of triangles
     with certain label patterns').
 
+    ``interpret=None`` resolves to the process-wide ``DEFAULT_INTERPRET``.
+
     Returns the number of ordered embeddings (u,v,w) with labels matching
     (q0,q1,q2) and {u,v},{v,w},{u,w} ∈ E.
     """
+    interpret = resolve_interpret(interpret)
     labels = np.asarray(labels)
     q0, q1, q2 = query_labels
     # candidate vertices: label in query labels, degree ≥ 2, 2-core

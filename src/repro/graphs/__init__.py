@@ -17,7 +17,7 @@ from repro.graphs.generators import (
     star_graph,
     path_graph,
 )
-from repro.graphs.datasets import DATASETS, load_dataset
+from repro.graphs.datasets import DATASETS, available_datasets, load_dataset
 
 __all__ = [
     "Graph",
@@ -36,5 +36,6 @@ __all__ = [
     "star_graph",
     "path_graph",
     "DATASETS",
+    "available_datasets",
     "load_dataset",
 ]

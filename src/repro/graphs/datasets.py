@@ -63,5 +63,24 @@ DATASETS: Dict[str, dict] = {
 }
 
 
+def available_datasets() -> list:
+    """Sorted names of every registered dataset (the Table-1 analogues plus
+    the tiny test fixtures)."""
+    return sorted(DATASETS)
+
+
 def load_dataset(name: str) -> Graph:
-    return DATASETS[name]["factory"]()
+    """Build the registered dataset ``name``.
+
+    Raises:
+      ValueError: unknown name — the message lists every available dataset
+        (a bare ``KeyError`` on a typo helped nobody).
+    """
+    try:
+        spec = DATASETS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown dataset {name!r}; available: "
+            f"{', '.join(available_datasets())}"
+        ) from None
+    return spec["factory"]()

@@ -5,21 +5,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs import load_dataset, rmat_graph
-from repro.core import (
-    triangle_count_intersection, triangle_count_matrix,
-    triangle_count_subgraph, triangle_count_scipy,
-)
+from repro.core import CountOptions, TriangleCounter, triangle_count_scipy
 
 
 def test_end_to_end_all_methods_on_datasets():
-    """The paper's core experiment at smoke scale: every method, both
-    topology classes, exact agreement."""
+    """The paper's core experiment at smoke scale: every lane through the
+    front door, both topology classes, exact agreement — plus the auto
+    cost model's pick."""
     for name in ("tiny-rmat", "tiny-grid"):
         g = load_dataset(name)
         truth = triangle_count_scipy(g)
-        assert triangle_count_intersection(g) == truth
-        assert triangle_count_matrix(g, block="auto") == truth
-        assert triangle_count_subgraph(g) == truth
+        for opts in (CountOptions(algorithm="intersection"),
+                     CountOptions(algorithm="matrix"),
+                     CountOptions(algorithm="subgraph")):
+            assert TriangleCounter(g, opts).count() == truth, (name, opts)
+        auto = TriangleCounter(g).count()
+        assert auto == truth
+        assert auto.algorithm in ("intersection", "matrix", "subgraph")
 
 
 def test_serving_loop_end_to_end():

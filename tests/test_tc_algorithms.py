@@ -1,4 +1,8 @@
-"""All three TC formulations must agree exactly with the oracle."""
+"""All three TC formulations must agree exactly with the oracle.
+
+Deliberately exercises the DEPRECATED one-shot shims (the facade equivalents
+live in tests/test_api.py): the shims must keep returning unchanged values
+while they exist."""
 
 import numpy as np
 import pytest

@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Public-API snapshot gate (the CI `api` job; also runnable locally).
+
+Renders the public surface of `repro.core` — `__all__`, the facade's
+signatures (`TriangleCounter`, `CountOptions`, `CountResult`), the algorithm
+registry contents, and every public callable's signature — and compares it
+line-for-line against the committed `docs/api_surface.txt`, so future PRs
+change the API deliberately (regenerate + commit the snapshot) rather than
+by drift.
+
+Usage:
+    PYTHONPATH=src python tools/check_api.py           # verify (CI)
+    PYTHONPATH=src python tools/check_api.py --write   # regenerate snapshot
+
+Signatures are rendered without type annotations so the snapshot is stable
+across Python versions (annotation repr changed between 3.9 and 3.12).
+Exits non-zero with a unified diff on mismatch.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import difflib
+import inspect
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SNAPSHOT = ROOT / "docs" / "api_surface.txt"
+
+sys.path.insert(0, str(ROOT / "src"))
+
+HEADER = "# Public-API snapshot. Regenerate: PYTHONPATH=src python tools/check_api.py --write"
+
+
+def _sig(fn) -> str:
+    """``inspect.signature`` with annotations stripped (version-stable)."""
+    sig = inspect.signature(fn)
+    params = [p.replace(annotation=inspect.Parameter.empty)
+              for p in sig.parameters.values()]
+    return str(sig.replace(parameters=params,
+                           return_annotation=inspect.Signature.empty))
+
+
+def _class_block(cls) -> list:
+    """One line per dataclass field / public method of ``cls``."""
+    lines = [f"class {cls.__name__}"]
+    if dataclasses.is_dataclass(cls):
+        for f in dataclasses.fields(cls):
+            if f.default_factory is not dataclasses.MISSING:
+                default = "<factory>"
+            elif f.default is dataclasses.MISSING:
+                default = "<required>"
+            else:
+                default = repr(f.default)
+            lines.append(f"  field {f.name} = {default}")
+    for name, member in sorted(vars(cls).items()):
+        if name.startswith("_"):
+            continue
+        if isinstance(member, property):
+            lines.append(f"  property {name}")
+        elif callable(member):
+            lines.append(f"  def {name}{_sig(member)}")
+    return lines
+
+
+def render() -> str:
+    import repro.core as core
+    from repro.core import api, options, registry
+
+    lines = [HEADER, "", "[repro.core.__all__]"]
+    lines += sorted(core.__all__)
+
+    lines += ["", "[registered algorithms]"]
+    lines += list(registry.available_algorithms())
+
+    lines += ["", "[facade]"]
+    for cls in (options.CountOptions, api.CountResult, api.TriangleCounter):
+        lines += _class_block(cls)
+
+    lines += ["", "[functions]"]
+    for name in sorted(core.__all__):
+        obj = getattr(core, name)
+        if inspect.isclass(obj) or not callable(obj):
+            continue
+        lines.append(f"def {name}{_sig(obj)}")
+
+    return "\n".join(lines) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate docs/api_surface.txt from the live API")
+    args = ap.parse_args()
+
+    current = render()
+    if args.write:
+        SNAPSHOT.write_text(current, encoding="utf-8")
+        print(f"wrote {SNAPSHOT.relative_to(ROOT)}")
+        return 0
+
+    if not SNAPSHOT.exists():
+        print(f"missing {SNAPSHOT.relative_to(ROOT)}; run with --write")
+        return 1
+    committed = SNAPSHOT.read_text(encoding="utf-8")
+    if committed == current:
+        print("api OK: public surface matches docs/api_surface.txt")
+        return 0
+    diff = difflib.unified_diff(
+        committed.splitlines(keepends=True), current.splitlines(keepends=True),
+        fromfile="docs/api_surface.txt (committed)",
+        tofile="repro.core (live)",
+    )
+    sys.stdout.writelines(diff)
+    print("\napi surface drifted: if intentional, regenerate with "
+          "`PYTHONPATH=src python tools/check_api.py --write` and commit")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
