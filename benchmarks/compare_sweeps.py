@@ -1,27 +1,138 @@
-"""Compare baseline vs final dry-run sweeps for EXPERIMENTS.md §Perf."""
-import json, sys
+"""Compare two dry-run sweep JSONL files cell by cell.
 
-def load(p):
+Each input is a ``launch/dryrun.py`` sweep output: one JSON object per line
+with ``arch``, ``shape``, ``mesh``, ``status``, a ``roofline`` block
+(``dominant``, ``t_<term>`` seconds, ``useful_ratio``), and a ``memory``
+block (``temp_size_in_bytes``). Cells are matched on (arch, shape, mesh);
+for every cell present in both files the table shows the dominant roofline
+term's time before/after, the delta %, temp memory, and the useful-flop
+ratio — the §Perf table of EXPERIMENTS.md.
+
+Cells that are missing from the baseline, failed (``status != "ok"``), or
+lack a roofline/memory block are reported as explicit ``n/a`` rows rather
+than dropped, so a sweep regression can't hide by erroring out. NaN or
+missing metric values render as ``n/a`` too.
+
+Usage:
+    python benchmarks/compare_sweeps.py dryrun_baseline.jsonl dryrun_final.jsonl
+    python benchmarks/compare_sweeps.py base.jsonl final.jsonl --only-ok
+
+See docs/BENCHMARKS.md §Comparing dry-run sweeps.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def load(path: str) -> dict:
+    """{(arch, shape, mesh): row} from a JSONL sweep file.
+
+    Malformed lines are skipped with a note on stderr instead of aborting
+    the whole comparison.
+    """
     out = {}
-    for line in open(p):
-        r = json.loads(line)
-        out[(r["arch"], r.get("shape"), r["mesh"])] = r
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                r = json.loads(line)
+                key = (r["arch"], r.get("shape"), r["mesh"])
+            except (json.JSONDecodeError, KeyError, TypeError) as e:
+                print(f"# {path}:{lineno}: skipping malformed line ({e})",
+                      file=sys.stderr)
+                continue
+            out[key] = r
     return out
 
-base = load("dryrun_baseline.jsonl")
-final = load("dryrun_final.jsonl")
-print(f"{'cell':46s} {'dom':10s} {'t_dom before':>12s} {'after':>8s} {'Δ%':>6s} "
-      f"{'temp before':>11s} {'after':>7s} {'useful b→a':>10s}")
-for key in sorted(final.keys()):
-    if key not in base: continue
-    b, f = base[key], final[key]
-    if b["status"] != "ok" or f["status"] != "ok": continue
-    rb, rf = b["roofline"], f["roofline"]
-    dom = rb["dominant"]
-    tb = rb[f"t_{dom}" if dom != "collective" else "t_collective"]
-    tf = rf[f"t_{dom}" if dom != "collective" else "t_collective"]
-    mb = b["memory"].get("temp_size_in_bytes", 0)/1e9
-    mf = f["memory"].get("temp_size_in_bytes", 0)/1e9
-    d = 100*(tf-tb)/tb if tb else 0
-    print(f"{key[0]+'/'+str(key[1])+'@'+key[2]:46s} {dom:10s} {tb:12.2f} {tf:8.2f} {d:5.0f}% "
-          f"{mb:10.1f}G {mf:6.1f}G {rb['useful_ratio']:.2f}→{rf['useful_ratio']:.2f}")
+
+def _num(x) -> float | None:
+    """A finite float, or None for missing/NaN/non-numeric values."""
+    try:
+        v = float(x)
+    except (TypeError, ValueError):
+        return None
+    return v if math.isfinite(v) else None
+
+
+def _fmt(v: float | None, spec: str, suffix: str = "") -> str:
+    return "n/a" if v is None else f"{v:{spec}}{suffix}"
+
+
+def _dominant_time(row: dict) -> tuple[str, float | None]:
+    roof = row.get("roofline") or {}
+    dom = roof.get("dominant") or "?"
+    return dom, _num(roof.get(f"t_{dom}"))
+
+
+def _term_time(row: dict, dom: str) -> float | None:
+    """Time of a *specific* roofline term (the baseline's dominant), so both
+    columns of a row compare the same term even when dominance shifted."""
+    return _num((row.get("roofline") or {}).get(f"t_{dom}"))
+
+
+def compare(base: dict, final: dict, *, only_ok: bool = False) -> int:
+    """Print the comparison table; returns the number of comparable cells."""
+    print(f"{'cell':46s} {'dom':10s} {'t_dom before':>12s} {'after':>8s} "
+          f"{'Δ%':>6s} {'temp before':>11s} {'after':>7s} {'useful b→a':>10s}")
+    compared = 0
+    for key in sorted(final.keys(), key=str):
+        cell = f"{key[0]}/{key[1]}@{key[2]}"
+        f = final[key]
+        b = base.get(key)
+        if b is None:
+            if not only_ok:
+                print(f"{cell:46s} {'n/a':10s}  (no baseline cell)")
+            continue
+        if b.get("status") != "ok" or f.get("status") != "ok":
+            if not only_ok:
+                print(f"{cell:46s} {'n/a':10s}  (status "
+                      f"{b.get('status')!r} → {f.get('status')!r})")
+            continue
+        dom, tb = _dominant_time(b)
+        tf = _term_time(f, dom)  # same term as the baseline's dominant
+        mb = _num((b.get("memory") or {}).get("temp_size_in_bytes"))
+        mf = _num((f.get("memory") or {}).get("temp_size_in_bytes"))
+        ub = _num((b.get("roofline") or {}).get("useful_ratio"))
+        uf = _num((f.get("roofline") or {}).get("useful_ratio"))
+        delta = None if tb in (None, 0.0) or tf is None \
+            else 100.0 * (tf - tb) / tb
+        print(f"{cell:46s} {dom:10s} {_fmt(tb, '12.2f')} {_fmt(tf, '8.2f')} "
+              f"{_fmt(delta, '5.0f', '%')} "
+              f"{_fmt(None if mb is None else mb / 1e9, '10.1f', 'G')} "
+              f"{_fmt(None if mf is None else mf / 1e9, '6.1f', 'G')} "
+              f"{_fmt(ub, '.2f')}→{_fmt(uf, '.2f')}")
+        compared += 1
+    return compared
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog="See docs/BENCHMARKS.md §Comparing dry-run sweeps.",
+    )
+    ap.add_argument("baseline", help="baseline sweep JSONL (dryrun output)")
+    ap.add_argument("final", help="final sweep JSONL to compare against it")
+    ap.add_argument("--only-ok", action="store_true",
+                    help="suppress the explicit n/a rows for missing or "
+                         "failed cells")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    final = load(args.final)
+    compared = compare(base, final, only_ok=args.only_ok)
+    print(f"# compared {compared} cells "
+          f"({len(base)} baseline, {len(final)} final)")
+    if compared == 0:
+        print("# no comparable cells — check the inputs", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,15 @@ Prints ``name,prep_us,count_us,derived`` CSV rows:
                record which strategy ``strategy="auto"`` would pick
                (derived = ``edges=E;auto=<choice>``). Cells outside the
                single-core budget emit explicit skipped rows.
+  fig_batch_* — beyond-paper: ``count_many`` batch-size sweep — the Python
+               loop of per-graph cached plans vs ONE vmapped ``GraphBatch``
+               dispatch over the same graphs (derived records the
+               loop/vmapped speedup). Tracks the batching win across PRs.
+
+Alongside the CSV, every executed figure is written as machine-readable
+``BENCH_<figure>.json`` (rows + env + device + the exact argv) into
+``--json-dir`` (default: the working directory), so the perf trajectory can
+be compared across PRs without re-parsing stdout.
 
 CPU-only proxy: all methods run their jnp backends on the host; relative
 orderings (intersection-filtered fastest, matrix slowest with a large
@@ -32,21 +41,29 @@ claims — see README.md §Experiments.
 
 ``--smoke`` swaps the dataset list for the tiny fixtures and drops the budget
 gates (the CI smoke job runs the default table1+fig5 subset; any
-``--figures`` selection, e.g. ``--figures strat --smoke``, honors it). Every
-fig5 and strat cell asserts exact agreement with its oracle, so a correctness
-regression fails the process. See docs/BENCHMARKS.md for the full contract.
+``--figures`` selection, e.g. ``--figures strat --smoke`` or ``--figures
+fig_batch --smoke``, honors it). Every fig5, strat, and fig_batch cell
+asserts exact agreement with its oracle, so a correctness regression fails
+the process. See docs/BENCHMARKS.md for the full contract.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
+import sys
 import time
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.graphs import DATASETS, load_dataset
-from repro.core import CountOptions, TriangleCounter, triangle_count_scipy
+from repro.core import (
+    CountOptions, GraphBatch, TriangleCounter, triangle_count_scipy,
+)
 from repro.core.engine import get_executable, prepare_intersection_buckets
 from repro.kernels.intersect import (
     STRATEGIES, intersect_counts_probe, intersect_counts_ref, resolve_strategy,
@@ -59,8 +76,33 @@ _ROWS = []
 
 def _emit(name: str, prep_us: float, count_us: float, derived) -> None:
     row = f"{name},{prep_us:.1f},{count_us:.1f},{derived}"
-    _ROWS.append(row)
+    _ROWS.append(dict(name=name, prep_us=round(prep_us, 1),
+                      count_us=round(count_us, 1), derived=str(derived)))
     print(row, flush=True)
+
+
+def _write_json(figures, json_dir: str, smoke: bool) -> None:
+    """One ``BENCH_<figure>.json`` per executed figure: its CSV rows plus
+    enough environment to compare runs across PRs/machines."""
+    env = dict(
+        python=platform.python_version(),
+        jax=jax.__version__,
+        numpy=np.__version__,
+        platform=platform.platform(),
+    )
+    device = str(jax.devices()[0])
+    os.makedirs(json_dir, exist_ok=True)
+    for fig in figures:
+        rows = [r for r in _ROWS if r["name"].startswith(fig + "_")]
+        path = os.path.join(json_dir, f"BENCH_{fig}.json")
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(
+                dict(figure=fig, smoke=smoke, argv=sys.argv[1:],
+                     env=env, device=device, rows=rows),
+                f, indent=2,
+            )
+            f.write("\n")
+        print(f"# wrote {path} ({len(rows)} rows)", flush=True)
 
 
 def _time(fn, *, warmup: int = 1, iters: int = 2) -> float:
@@ -236,26 +278,71 @@ def strat(datasets, *, iters: int = 2) -> None:
                 _emit(row, prep_us, count_us, derived)
 
 
+def fig_batch(sizes, *, iters: int = 2, scale: int = 7,
+              edge_factor: int = 6) -> None:
+    """``count_many`` batching sweep: per-graph loop vs one vmapped dispatch.
+
+    For each batch size B, generates B same-policy R-MAT graphs, then times
+    (a) a Python loop replaying B cached per-graph plans and (b) one
+    ``GraphBatch.counts()`` device dispatch over the stacked buckets. Both
+    lanes assert exact agreement with the scipy oracle; derived records the
+    loop/vmapped speedup.
+    """
+    opts = CountOptions(algorithm="intersection")
+    for B in sizes:
+        graphs = [rmat_graph(scale, edge_factor, seed=200 + i,
+                             name=f"rmat{scale}b{i}") for i in range(B)]
+        truth = [triangle_count_scipy(g) for g in graphs]
+
+        t0 = time.perf_counter()
+        sessions = [TriangleCounter(g, opts) for g in graphs]
+        loop_counts = [int(s.count()) for s in sessions]
+        loop_prep_us = (time.perf_counter() - t0) * 1e6
+        assert loop_counts == truth, ("fig_batch loop", B)
+        loop_us = _time(lambda: [s.plan.count() for s in sessions],
+                        iters=iters)
+        _emit(f"fig_batch_rmat{scale}_B{B}_loop", loop_prep_us, loop_us,
+              f"graphs={B}")
+
+        t0 = time.perf_counter()
+        batch = GraphBatch.from_graphs(graphs, opts)
+        batch_counts = [int(c) for c in batch.counts()]
+        batch_prep_us = (time.perf_counter() - t0) * 1e6
+        assert batch_counts == truth, ("fig_batch vmapped", B)
+        batch_us = _time(batch.counts, iters=iters)
+        _emit(f"fig_batch_rmat{scale}_B{B}_vmapped", batch_prep_us, batch_us,
+              f"graphs={B};speedup={loop_us / max(batch_us, 1e-9):.2f}x")
+
+
 _SMOKE_DATASETS = ["tiny-rmat", "tiny-grid"]
 _SMOKE_SCALES = [7, 8]
+_BATCH_SIZES = (2, 4, 8, 16)
+_SMOKE_BATCH_SIZES = (4, 8)
+
+_FIGURES = ("table1", "fig5", "fig6", "strat", "fig_batch")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--figures", default=None,
-                    help="comma list from {table1,fig5,fig6,strat}")
+                    help=f"comma list from {{{','.join(_FIGURES)}}}")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced subset on the tiny fixtures (CI job): "
                          "table1+fig5 by default, any --figures supported")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for the BENCH_<figure>.json sidecars "
+                         "(default: current directory)")
     args = ap.parse_args()
 
     if args.smoke:
         figures = (args.figures or "table1,fig5").split(",")
         datasets, scales, budget, iters = _SMOKE_DATASETS, _SMOKE_SCALES, False, 1
+        batch_sizes = _SMOKE_BATCH_SIZES
     else:
-        figures = (args.figures or "table1,fig5,fig6,strat").split(",")
+        figures = (args.figures or ",".join(_FIGURES)).split(",")
         datasets, scales, budget, iters = DATASETS_FIG5, FIG6_SCALES, True, 2
-    unknown = set(figures) - {"table1", "fig5", "fig6", "strat"}
+        batch_sizes = _BATCH_SIZES
+    unknown = set(figures) - set(_FIGURES)
     if unknown:
         ap.error(f"unknown figures: {sorted(unknown)}")
 
@@ -268,6 +355,9 @@ def main() -> None:
         fig6(scales, iters=iters)
     if "strat" in figures:
         strat(datasets, iters=iters)
+    if "fig_batch" in figures:
+        fig_batch(batch_sizes, iters=iters)
+    _write_json(figures, args.json_dir, args.smoke)
 
 
 if __name__ == "__main__":

@@ -7,7 +7,10 @@ Public API:
     register_algorithm / available_algorithms / choose_algorithm /
         set_auto_chooser — the algorithm registry + auto cost model
     plan_triangle_count / TrianglePlan — the plan/execute engine underneath:
-        host prep once, device-resident buffers + cached compiled kernels
+        device-resident prep (see ``repro.core.prep``), device buffers +
+        cached compiled kernels
+    GraphBatch — same-policy graphs stacked into one vmapped device
+        dispatch (the ``count_many`` fast path)
     DEFAULT_INTERPRET / resolve_interpret — the single interpret-mode default
         (``TC_INTERPRET`` env var)
     enumerate_triangles / k_truss / edge_support — host-side enumeration
@@ -32,6 +35,7 @@ from repro.core.registry import (
 )
 from repro.core.engine import (
     STRATEGIES,
+    GraphBatch,
     TrianglePlan,
     choose_strategy,
     clear_executable_cache,
@@ -80,6 +84,7 @@ __all__ = [
     "choose_algorithm",
     "set_auto_chooser",
     "STRATEGIES",
+    "GraphBatch",
     "TrianglePlan",
     "plan_triangle_count",
     "choose_strategy",

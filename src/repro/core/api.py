@@ -34,14 +34,15 @@ preserved, same return values, plus a ``DeprecationWarning``.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 import warnings
-from typing import Any, Dict, Iterable, List, Optional, Tuple
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import registry
-from repro.core.engine import plan_triangle_count
+from repro.core.engine import GraphBatch, plan_triangle_count
 from repro.core.options import CountOptions
 from repro.graphs.formats import Graph
 
@@ -175,22 +176,88 @@ class TriangleCounter:
             meta=meta,
         )
 
-    def count_many(self, graphs: Iterable[Graph]) -> List[CountResult]:
+    def count_many(self, graphs: Iterable[Graph],
+                   *, batch_size: int = 8) -> List[CountResult]:
         """Count a batch of graphs under this session's options.
 
-        Each graph gets its own plan (and, under ``algorithm="auto"``, its
-        own lane resolution), but all plans share the process-wide executable
-        cache — same-shaped graphs (generated batches, R-MAT sweeps) compile
-        nothing after the first. The session's own graph reuses the session
-        plan.
+        The input is consumed LAZILY, ``batch_size`` graphs at a time —
+        generators are never materialized up front. Within each chunk, every
+        graph whose lane resolves to the batchable regime (``intersection``,
+        ``backend="jnp"``, ``prep_backend="device"`` — the defaults) is
+        device-prepped and stacked into one ``GraphBatch``, so the whole
+        chunk is counted by ONE vmapped device dispatch instead of a Python
+        loop of per-graph plans. The stacked executable comes from the
+        engine's shape-policy-keyed batch-plan cache, so successive chunks
+        whose policy-rounded layouts collide compile nothing new.
+
+        Graphs outside the batchable regime (other lanes under
+        ``algorithm="auto"``, pallas backends, host prep) fall back to a
+        per-graph session; the session's own graph reuses the session plan.
+        Results come back in input order. Batched results share one
+        ``GraphBatch`` as their ``plan`` handle, and their
+        ``prep_seconds`` / ``exec_seconds`` are the WHOLE chunk's figures
+        (``meta["batched"]`` / ``meta["batch_size"]`` mark them) — don't sum
+        them across a chunk.
         """
-        results = []
-        for g in graphs:
+        return list(self.iter_counts(graphs, batch_size=batch_size))
+
+    def iter_counts(self, graphs: Iterable[Graph],
+                    *, batch_size: int = 8) -> Iterator[CountResult]:
+        """Generator form of ``count_many``: yields ``CountResult``s in input
+        order while pulling at most ``batch_size`` graphs ahead of the
+        consumer (the streaming surface for unbounded graph sources)."""
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be ≥ 1, got {batch_size}")
+        it = iter(graphs)
+        while True:
+            chunk = list(itertools.islice(it, batch_size))
+            if not chunk:
+                return
+            yield from self._count_chunk(chunk)
+
+    def _batchable(self, lane: str) -> bool:
+        return (lane == "intersection"
+                and self.options.backend == "jnp"
+                and self.options.prep_backend == "device")
+
+    def _count_chunk(self, chunk: List[Graph]) -> List[CountResult]:
+        results: List[Optional[CountResult]] = [None] * len(chunk)
+        batchable: List[Tuple[int, Graph]] = []
+        for pos, g in enumerate(chunk):
             if g is self.graph:
-                results.append(self.count())
+                results[pos] = self.count()
+                continue
+            lane = (self.options.algorithm
+                    if self.options.algorithm != "auto"
+                    else registry.choose_algorithm(g))
+            if self._batchable(lane):
+                batchable.append((pos, g))
             else:
-                results.append(
-                    TriangleCounter(g, self.options, mesh=self.mesh).count()
+                results[pos] = TriangleCounter(
+                    g, self.options, mesh=self.mesh
+                ).count()
+        if len(batchable) == 1:  # nothing to stack; a plain session is cheaper
+            pos, g = batchable[0]
+            results[pos] = TriangleCounter(g, self.options,
+                                           mesh=self.mesh).count()
+        elif batchable:
+            opts = self.options if self.options.algorithm == "intersection" \
+                else self.options.replace(algorithm="intersection")
+            batch = GraphBatch.from_graphs([g for _, g in batchable], opts)
+            t0 = time.perf_counter()
+            counts = batch.counts()
+            exec_seconds = time.perf_counter() - t0
+            for (pos, g), c in zip(batchable, counts):
+                results[pos] = CountResult(
+                    count=int(c),
+                    algorithm="intersection",
+                    options=self.options,
+                    bucket_strategies=batch.meta["bucket_strategies"],
+                    prep_seconds=batch.prep_seconds,
+                    exec_seconds=exec_seconds,
+                    plan=batch,
+                    meta=dict(batch.meta, graph=g.name, n=g.n,
+                              m=g.m_undirected, batched=True),
                 )
         return results
 

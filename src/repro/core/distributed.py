@@ -40,11 +40,12 @@ except ImportError:  # older jax ships it under experimental
     from jax.experimental.shard_map import shard_map
 
 from repro.graphs.formats import Graph
+from repro.graphs.device import DEFAULT_SHAPE_POLICY
+from repro.core import prep
 from repro.core.engine import (
     DEFAULT_WIDTHS,
     build_tile_schedule,
     choose_block,
-    prepare_intersection_buckets,
 )
 from repro.core.registry import OneShotPlan, register_algorithm
 from repro.kernels.intersect.ops import intersect_counts, resolve_strategy
@@ -121,6 +122,11 @@ def _intersection_distributed(
 ) -> int:
     """Forward-algorithm TC with each degree bucket's edges sharded.
 
+    The prep stage is the device-resident pipeline (``repro.core.prep``):
+    orientation, bucketing, and the padded gathers run as jitted stages and
+    the resulting ``DeviceBucket`` arrays are resharded directly — no
+    per-graph host numpy beyond the schedule scalars.
+
     Args:
       g: undirected simple ``Graph``.
       mesh: jax device mesh (defaults to a 1-D mesh over all devices); the
@@ -139,17 +145,21 @@ def _intersection_distributed(
         mesh = make_mesh((jax.device_count(),), ("data",))
     ndev = int(np.prod(mesh.devices.shape))
     axes = tuple(mesh.axis_names)
-    buckets = prepare_intersection_buckets(g, variant="filtered", widths=widths)
+    buckets = prep.prepare_intersection_buckets_device(
+        g, variant="filtered", widths=widths, policy=DEFAULT_SHAPE_POLICY,
+    )
     id_range = g.n + 2  # real ids plus the n / n+1 in-row sentinels
     total = 0
     for b in buckets:
-        u, v = b["u_lists"], b["v_lists"]
-        strat, bits = resolve_strategy(b["width"], id_range, strategy=strategy)
+        u, v = b.u_lists, b.v_lists
+        strat, bits = resolve_strategy(b.width, id_range, strategy=strategy)
         # pad rows with disjoint sentinels so padding contributes 0
         pad = (-u.shape[0]) % ndev
         if pad:
-            u = np.concatenate([u, np.full((pad, u.shape[1]), -1, u.dtype)])
-            v = np.concatenate([v, np.full((pad, v.shape[1]), -2, v.dtype)])
+            u = jnp.concatenate(
+                [u, jnp.full((pad, u.shape[1]), -1, u.dtype)])
+            v = jnp.concatenate(
+                [v, jnp.full((pad, v.shape[1]), -2, v.dtype)])
         u = u.reshape(ndev, -1, u.shape[1])
         v = v.reshape(ndev, -1, v.shape[1])
         spec = P(axes)

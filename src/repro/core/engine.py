@@ -40,9 +40,20 @@ plan (``strategy="probe"`` etc.), is baked into each stage's executable-cache
 key, and is surfaced as ``meta["bucket_strategies"]`` by
 ``count_with_stats()``.
 
-The host-stage helpers (``prepare_intersection_buckets``,
-``build_tile_schedule``, ``choose_block``, ``peel_to_two_core``) live here and
-are re-exported by the per-algorithm modules for backward compatibility.
+Since PR 4 the prep stage itself is *device-resident* by default
+(``prep_backend="device"``): orientation, bucketing, padded gathers, the
+2-core peel, and the induced-subgraph reform run as the jitted stages in
+``repro.core.prep`` / ``repro.graphs.device``, with a ``ShapePolicy``
+rounding every data-dependent extent to a power of two so same-policy graphs
+share traced prep stages and counting executables. ``prep_backend="host"``
+keeps the numpy parity path. On top of the static shapes, ``GraphBatch``
+stacks same-policy graphs and counts the whole batch in ONE vmapped device
+dispatch (the ``TriangleCounter.count_many`` fast path).
+
+The historical prep helpers (``prepare_intersection_buckets``,
+``build_tile_schedule``, ``choose_block``, ``peel_to_two_core``) are thin
+wrappers over ``repro.core.prep``, re-exported by the per-algorithm modules
+for backward compatibility.
 """
 
 from __future__ import annotations
@@ -66,6 +77,10 @@ from repro.graphs.formats import (
     orient_forward,
     to_block_sparse,
 )
+from repro.graphs.device import DEFAULT_SHAPE_POLICY, DeviceGraph, ShapePolicy
+from repro.core import prep
+# _two_core_peel: back-compat re-export (it lived here before PR 4)
+from repro.core.prep import DeviceBucket, _two_core_peel  # noqa: F401
 from repro.core.options import DEFAULT_WIDTHS, resolve_interpret
 from repro.kernels.intersect.ops import (
     STRATEGIES,
@@ -76,6 +91,7 @@ from repro.kernels.intersect.ops import (
 from repro.kernels.masked_spgemm.ops import masked_spgemm_counts
 
 __all__ = [
+    "GraphBatch",
     "TrianglePlan",
     "plan_triangle_count",
     "prepare_intersection_buckets",
@@ -94,7 +110,8 @@ ALGORITHMS = ("intersection", "matrix", "subgraph")
 
 
 # ---------------------------------------------------------------------------
-# Host stage (numpy prep) — runs exactly once per plan
+# Prep stage — thin wrappers over repro.core.prep (kept for the historical
+# import surface; the plan stage below calls prep directly)
 # ---------------------------------------------------------------------------
 
 def prepare_intersection_buckets(
@@ -102,185 +119,29 @@ def prepare_intersection_buckets(
     variant: str = "filtered",
     widths: Sequence[int] = DEFAULT_WIDTHS,
 ) -> list:
-    """Host-side stage of the intersection method: orientation + degree-class
-    bucketing + padded neighbor gathers.
-
-    Args:
-      g: undirected simple ``Graph``.
-      variant: "filtered" — forward orientation (rank = (degree, id)), the
-        paper's "filter out half of the edges by degree order"; the oriented
-        rows double as the reformed induced subgraph's neighbor lists.
-        "full" — all directed edges with full neighbor lists (each triangle
-        found 6×), the tc-intersection-full ablation.
-      widths: ascending degree-class bucket widths; edges wider than
-        ``widths[-1]`` land in a final next-pow2 bucket.
-
-    Returns:
-      A list of dicts ``{u_lists, v_lists, src, dst, width}``, one per
-      non-empty degree-class bucket. ``u_lists``/``v_lists`` are (E_b, W_b)
-      int32 numpy arrays of sorted neighbor lists; ``src``/``dst`` are the
-      (E_b,) edge endpoints each row belongs to (per-vertex analysis scatters
-      through them). Sentinel-padding rule: u rows pad with ``n``, v rows
-      with ``n + 1`` (never equal ⇒ padding contributes zero matches); both
-      sentinels sort above every real id, keeping rows sorted.
-    """
-    if variant == "filtered":
-        dag = orient_forward(g)
-        src = np.repeat(np.arange(dag.n, dtype=np.int32), dag.degrees)
-        dst = dag.col_idx
-        deg = dag.degrees
-        base = dag
-    elif variant == "full":
-        src = np.repeat(np.arange(g.n, dtype=np.int32), g.degrees)
-        dst = g.col_idx
-        deg = g.degrees
-        base = g
-    else:
-        raise ValueError(
-            f"unknown variant {variant!r}; expected 'filtered' or 'full'"
-        )
-
-    buckets = bucket_edges_by_degree(src, dst, deg, widths=widths)
-    out = []
-    for b in buckets:
-        w = b["width"]
-        nbrs = csr_to_padded_neighbors(base, pad_to=max(w, 1), fill=g.n)
-        u_lists = nbrs[b["src"]]
-        v_lists = nbrs[b["dst"]].copy()
-        v_lists[v_lists == g.n] = g.n + 1  # disjoint sentinel
-        out.append(dict(u_lists=u_lists, v_lists=v_lists,
-                        src=b["src"], dst=b["dst"], width=w))
-    return out
+    """Numpy intersection prep (parity reference) — see
+    ``repro.core.prep.prepare_intersection_buckets_host``. The plan stage
+    uses the device-resident prep by default (``prep_backend="device"``)."""
+    return prep.prepare_intersection_buckets_host(g, variant=variant,
+                                                  widths=widths)
 
 
 def choose_block(g: Graph) -> int:
-    """Adaptive tile size (§Perf hillclimb, beyond-paper): degree-permuted
-    scale-free graphs densify the bottom-right tile cluster, so 128 (MXU
-    native) wins; mesh-like graphs (low, uniform degree) never fill tiles —
-    measured 40,000× MXU-flop waste and 25× wall-time regression at 128 vs
-    32 on road-like — so low-avg-degree graphs get small tiles."""
-    avg_deg = 2.0 * g.m_undirected / max(g.n, 1)
-    return 128 if avg_deg >= 8.0 else 32
+    """Adaptive matrix-lane tile size — see ``repro.core.prep.choose_block``."""
+    return prep.choose_block(g)
 
 
 def build_tile_schedule(
     g: Graph, block: int = 128, permute: bool = True
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, dict]:
-    """Host-side stage of the matrix method: degree permutation + BSR tiling +
-    the L/U/A triple schedule.
-
-    Args:
-      g: undirected simple ``Graph``.
-      block: dense tile edge length B (128 = MXU native).
-      permute: apply the degree-order permutation first (the paper's
-        tc-matrix step 1).
-
-    Returns:
-      (l_tiles, u_tiles, a_tiles, stats): three stacked (T, B, B) float32
-      arrays — the L tile, U tile, and A mask tile of each scheduled triple —
-      plus a stats dict (num_triples, tile counts, grid, block, tile_flops).
-      Triples are sorted heavy-first (by block density product); that order is
-      the unit of distribution for multi-device TC (core/distributed.py deals
-      it round-robin for static load balance — the TPU analogue of
-      merge-path's equal-work splitting).
-    """
-    if permute:
-        perm = degree_order_permutation(g)
-        g = apply_permutation(g, perm)
-    a_bsr = to_block_sparse(g, block=block, part="upper")  # mask: strict upper
-    l_bsr = to_block_sparse(g, block=block, part="lower")
-    u_bsr = to_block_sparse(g, block=block, part="upper")
-
-    # block-row index of L: row -> list of (K, tile_id); block-col index of U
-    l_rows: dict = {}
-    for t in range(l_bsr.num_blocks):
-        l_rows.setdefault(int(l_bsr.block_row[t]), []).append(
-            (int(l_bsr.block_col[t]), t)
-        )
-    u_cols: dict = {}
-    for t in range(u_bsr.num_blocks):
-        u_cols.setdefault(int(u_bsr.block_col[t]), []).append(
-            (int(u_bsr.block_row[t]), t)
-        )
-
-    trip_l, trip_u, trip_a = [], [], []
-    for t in range(a_bsr.num_blocks):
-        bi, bj = int(a_bsr.block_row[t]), int(a_bsr.block_col[t])
-        lk = dict(l_rows.get(bi, ()))
-        uk = dict(u_cols.get(bj, ()))
-        for k in lk.keys() & uk.keys():
-            trip_a.append(t)
-            trip_l.append(lk[k])
-            trip_u.append(uk[k])
-
-    T = len(trip_a)
-    stats = dict(
-        num_triples=T,
-        a_tiles=a_bsr.num_blocks,
-        l_tiles=l_bsr.num_blocks,
-        u_tiles=u_bsr.num_blocks,
-        grid=a_bsr.grid,
-        block=block,
-        tile_flops=2 * T * block**3,
-    )
-    if T == 0:
-        z = np.zeros((0, block, block), dtype=np.float32)
-        return z, z, z, stats
-
-    l_sel = l_bsr.blocks[np.asarray(trip_l)]
-    u_sel = u_bsr.blocks[np.asarray(trip_u)]
-    a_sel = a_bsr.blocks[np.asarray(trip_a)]
-    # heavy-first ordering by nnz(L)·nnz(U) so chunked execution and
-    # round-robin sharding see a monotone work profile
-    work = l_sel.sum(axis=(1, 2)) * u_sel.sum(axis=(1, 2))
-    order = np.argsort(-work, kind="stable")
-    return l_sel[order], u_sel[order], a_sel[order], stats
-
-
-@functools.partial(jax.jit, static_argnames=("n",))
-def _two_core_peel(src: jnp.ndarray, dst: jnp.ndarray, init_alive: jnp.ndarray, *, n: int):
-    """Fixed-point peel: drop vertices whose alive-degree < 2."""
-
-    def cond(state):
-        alive, changed = state
-        return changed
-
-    def body(state):
-        alive, _ = state
-        contrib = (alive[src] & alive[dst]).astype(jnp.int32)
-        deg = jax.ops.segment_sum(contrib, src, num_segments=n)
-        new_alive = alive & (deg >= 2)
-        return new_alive, jnp.any(new_alive != alive)
-
-    alive, _ = jax.lax.while_loop(cond, body, (init_alive, jnp.array(True)))
-    return alive
+    """Matrix-lane tile schedule — see ``repro.core.prep.build_tile_schedule``."""
+    return prep.build_tile_schedule(g, block=block, permute=permute)
 
 
 def peel_to_two_core(g: Graph, labels: Optional[np.ndarray] = None,
                      query_label: Optional[int] = None) -> np.ndarray:
-    """INITIALIZE_CANDIDATE_SET + iterated filter, to fixed point.
-
-    Args:
-      g: undirected simple ``Graph``.
-      labels: optional (n,) vertex labels for labeled subgraph queries.
-      query_label: with ``labels``, prune vertices whose label cannot match
-        any query vertex before the degree peel.
-
-    Returns:
-      Bool (n,) numpy mask of vertices surviving the 2-core peel (every
-      triangle vertex has ≥ 2 alive neighbors, so counting on the induced
-      subgraph is exact).
-    """
-    src = np.repeat(np.arange(g.n, dtype=np.int32), g.degrees)
-    dst = g.col_idx
-    init = np.ones(g.n, dtype=bool)
-    if labels is not None and query_label is not None:
-        init &= np.asarray(labels) == query_label
-    if g.m_directed == 0:
-        return np.zeros(g.n, dtype=bool)
-    alive = _two_core_peel(jnp.asarray(src), jnp.asarray(dst),
-                           jnp.asarray(init), n=g.n)
-    return np.asarray(alive)
+    """Host-API 2-core peel — see ``repro.core.prep.peel_to_two_core``."""
+    return prep.peel_to_two_core(g, labels=labels, query_label=query_label)
 
 
 # ---------------------------------------------------------------------------
@@ -393,6 +254,56 @@ def get_executable(algorithm: str, backend: str, interpret: bool,
         fn = _build_vertex_executable(int(shape_key[-1]))
     else:
         raise ValueError(f"unknown algorithm {algorithm!r}")
+    _EXECUTABLE_CACHE[key] = fn
+    return fn
+
+
+def _build_batch_executable(specs: tuple, backend: str,
+                            interpret: bool) -> Callable:
+    """One jitted program counting a whole stacked batch of graphs.
+
+    ``specs`` is one ``(strategy, bitmap_bits, (e_pad, width))`` triple per
+    bucket; the executable takes the flattened (u, v) pairs — each a
+    (B, e_pad, width) stack — and returns the (B,) per-graph totals. Every
+    bucket's vmapped intersection and the cross-bucket reduction live in a
+    single traced computation: ONE device dispatch per batch.
+    """
+
+    @jax.jit
+    def run(*arrays):
+        total = jnp.zeros(arrays[0].shape[0], jnp.int32)
+        for i, (strat, bits, _) in enumerate(specs):
+            u, v = arrays[2 * i], arrays[2 * i + 1]
+
+            def one(uu, vv, strat=strat, bits=bits):
+                return jnp.sum(intersect_counts(
+                    uu, vv, strategy=strat, backend=backend,
+                    interpret=interpret, bitmap_bits=bits,
+                ))
+
+            total = total + jax.vmap(one)(u, v)
+        return total
+
+    return run
+
+
+def get_batch_executable(specs: tuple, backend: str, interpret: bool,
+                         batch: int) -> Callable:
+    """Fetch (or build) the vmapped batch executable for one stacked layout.
+
+    Cached in the same process-wide executable cache under
+    ``("intersection_batch", None, backend, interpret, None,
+    (batch,) + specs)`` — the shape-policy-keyed batch-plan cache: two
+    batches whose policy-rounded layouts collide share one compiled program.
+    """
+    key = ("intersection_batch", None, backend, bool(interpret), None,
+           (int(batch),) + tuple(specs))
+    fn = _EXECUTABLE_CACHE.get(key)
+    if fn is not None:
+        _CACHE_STATS["hits"] += 1
+        return fn
+    _CACHE_STATS["misses"] += 1
+    fn = _build_batch_executable(tuple(specs), backend, bool(interpret))
     _EXECUTABLE_CACHE[key] = fn
     return fn
 
@@ -530,46 +441,83 @@ class TrianglePlan:
         return [st.shape_key for st in self.stages]
 
 
-def _plan_intersection(g: Graph, variant: str, backend: str, interpret: bool,
+def _resolve_bucket_strategy(width: int, id_range: int, strategy: str,
+                             bitmap_bits: Optional[int]):
+    """Resolve one bucket's (strategy, bitmap_bits), honoring a forced
+    ``bitmap_bits`` override (which must cover the id range)."""
+    strat, bits = resolve_strategy(width, id_range, strategy=strategy)
+    if bitmap_bits is not None and strat == "bitmap":
+        if bitmap_bits < id_range:
+            raise ValueError(
+                f"bitmap_bits={bitmap_bits} cannot represent id range "
+                f"{id_range} (n + 2 sentinel ids); ids past the capacity "
+                f"would silently never match"
+            )
+        bits = int(bitmap_bits)
+    return strat, bits
+
+
+def _buckets_for_plan(g, variant: str, widths: Sequence[int],
+                      prep_backend: str, policy: Optional[ShapePolicy],
+                      ) -> List[DeviceBucket]:
+    """Run the prep stage on the requested backend; either way the result is
+    device-resident ``DeviceBucket``s (the host path uploads its arrays)."""
+    if prep_backend == "device":
+        return prep.prepare_intersection_buckets_device(
+            g, variant=variant, widths=widths, policy=policy,
+        )
+    host = prep.prepare_intersection_buckets_host(g, variant=variant,
+                                                  widths=widths)
+    return [
+        DeviceBucket(
+            width=b["width"], edges=int(b["u_lists"].shape[0]),
+            u_lists=jnp.asarray(b["u_lists"]), v_lists=jnp.asarray(b["v_lists"]),
+            src=jnp.asarray(b["src"]), dst=jnp.asarray(b["dst"]),
+        )
+        for b in host
+    ]
+
+
+def _plan_intersection(g, variant: str, backend: str, interpret: bool,
                        widths: Sequence[int], strategy: str = "auto",
                        bitmap_bits: Optional[int] = None,
+                       prep_backend: str = "device",
+                       shape_policy: Optional[ShapePolicy] = None,
                        ) -> Tuple[List[_Stage], int, dict]:
-    buckets = prepare_intersection_buckets(g, variant=variant, widths=widths)
+    buckets = _buckets_for_plan(g, variant, widths, prep_backend, shape_policy)
     # id range covers real vertex ids [0, n) plus the in-row padding
-    # sentinels n (u rows) and n+1 (v rows)
+    # sentinels n (u rows) and n+1 (v rows); whole-row padding (-1/-2) is
+    # negative and never matches in any core
     id_range = g.n + 2
     stages = []
     for b in buckets:
-        shape_key = tuple(b["u_lists"].shape)
-        strat, bits = resolve_strategy(b["width"], id_range, strategy=strategy)
-        if bitmap_bits is not None and strat == "bitmap":
-            if bitmap_bits < id_range:
-                raise ValueError(
-                    f"bitmap_bits={bitmap_bits} cannot represent id range "
-                    f"{id_range} (n + 2 sentinel ids); ids past the capacity "
-                    f"would silently never match"
-                )
-            bits = int(bitmap_bits)
+        shape_key = b.shape
+        strat, bits = _resolve_bucket_strategy(b.width, id_range, strategy,
+                                               bitmap_bits)
         fn = get_executable("intersection", backend, interpret, shape_key,
                             strategy=strat, bitmap_bits=bits)
         vertex_args = None
         if variant == "filtered":
-            vertex_args = (jnp.asarray(b["src"]), jnp.asarray(b["dst"]))
+            vertex_args = (b.src, b.dst)
         stages.append(_Stage(
             executable=fn,
-            args=(jnp.asarray(b["u_lists"]), jnp.asarray(b["v_lists"])),
+            args=(b.u_lists, b.v_lists),
             shape_key=shape_key,
             strategy=strat,
             bitmap_bits=bits,
             vertex_args=vertex_args,
         ))
+    policy = shape_policy if shape_policy is not None else DEFAULT_SHAPE_POLICY
     meta = dict(
         variant=variant,
         widths=tuple(widths),
         strategy=strategy,
+        prep_backend=prep_backend,
+        shape_policy=policy.key() if prep_backend == "device" else None,
         bucket_shapes=[s.shape_key for s in stages],
         bucket_strategies=[(s.shape_key[1], s.strategy) for s in stages],
-        edges=int(sum(s.shape_key[0] for s in stages)),
+        bucket_edges=[b.edges for b in buckets],
+        edges=int(sum(b.edges for b in buckets)),
     )
     return stages, (6 if variant == "full" else 1), meta
 
@@ -597,7 +545,35 @@ def _plan_matrix(g: Graph, block, permute: bool, backend: str,
 def _plan_subgraph(g: Graph, backend: str, interpret: bool,
                    widths: Sequence[int], strategy: str = "auto",
                    bitmap_bits: Optional[int] = None,
+                   prep_backend: str = "device",
+                   shape_policy: Optional[ShapePolicy] = None,
                    ) -> Tuple[List[_Stage], int, dict]:
+    if prep_backend == "device":
+        # FILTER + RECONSTRUCT on device: the induced graph keeps original
+        # vertex ids (dead vertices just lose their rows), so stage counts
+        # scatter directly into original-id space — no vertex_map needed
+        policy = shape_policy if shape_policy is not None \
+            else DEFAULT_SHAPE_POLICY
+        dg = DeviceGraph.from_graph(g, policy)
+        alive = prep.peel_to_two_core_device(dg)
+        sub_dg = prep.induced_device_graph(dg, alive)
+        alive_count = int(jnp.sum(alive))
+        stages, _, inner = _plan_intersection(
+            sub_dg, variant="filtered", backend=backend, interpret=interpret,
+            widths=widths, strategy=strategy, bitmap_bits=bitmap_bits,
+            prep_backend="device", shape_policy=policy,
+        )
+        # the sub-plan's id range is the parent's (ids are preserved)
+        meta = dict(
+            vertices_pruned=int(g.n - alive_count),
+            prune_fraction=float(1.0 - alive_count / max(g.n, 1)),
+            edges_after=sub_dg.m_undirected,
+            edges_before=g.m_undirected,
+            vertex_n=g.n,
+            **inner,
+        )
+        return stages, 1, meta
+
     alive = peel_to_two_core(g)
     sub, old_ids = induced_subgraph(g, alive)
     # join on the pruned graph; forward-filtered intersection counts each
@@ -605,6 +581,7 @@ def _plan_subgraph(g: Graph, backend: str, interpret: bool,
     stages, _, inner = _plan_intersection(
         sub, variant="filtered", backend=backend, interpret=interpret,
         widths=widths, strategy=strategy, bitmap_bits=bitmap_bits,
+        prep_backend="host",
     )
     # subgraph stages share the intersection executables by construction
     meta = dict(
@@ -633,6 +610,8 @@ def plan_triangle_count(
     block="auto",
     permute: bool = True,
     bitmap_bits: Optional[int] = None,
+    prep_backend: str = "device",
+    shape_policy: Optional[ShapePolicy] = None,
 ) -> TrianglePlan:
     """Run the host stage once and return a device-resident ``TrianglePlan``.
 
@@ -655,6 +634,11 @@ def plan_triangle_count(
       bitmap_bits: optional forced packed capacity for bitmap-strategy
         buckets (must cover the graph's id range ``n + 2``); None sizes it
         via ``resolve_strategy``.
+      prep_backend: intersection/subgraph lanes — "device" (default) runs
+        the prep stage as the jitted pipeline in ``repro.core.prep``;
+        "host" runs the numpy parity path.
+      shape_policy: the ``ShapePolicy`` rounding device-prep extents into
+        static shape classes; None means ``DEFAULT_SHAPE_POLICY``.
 
     Returns:
       A ``TrianglePlan`` whose ``count()`` replays the device stage only.
@@ -666,13 +650,15 @@ def plan_triangle_count(
     t0 = time.perf_counter()
     if algorithm == "intersection":
         stages, divisor, meta = _plan_intersection(
-            g, variant, backend, interpret, widths, strategy, bitmap_bits
+            g, variant, backend, interpret, widths, strategy, bitmap_bits,
+            prep_backend, shape_policy,
         )
     elif algorithm == "matrix":
         stages, divisor, meta = _plan_matrix(g, block, permute, backend, interpret)
     elif algorithm == "subgraph":
         stages, divisor, meta = _plan_subgraph(g, backend, interpret, widths,
-                                               strategy, bitmap_bits)
+                                               strategy, bitmap_bits,
+                                               prep_backend, shape_policy)
     else:
         raise ValueError(
             f"unknown algorithm {algorithm!r}; expected one of {ALGORITHMS}"
@@ -689,3 +675,160 @@ def plan_triangle_count(
         meta=meta,
         prep_seconds=prep_seconds,
     )
+
+
+# ---------------------------------------------------------------------------
+# GraphBatch — same-policy graphs stacked into one vmapped dispatch
+# ---------------------------------------------------------------------------
+
+def _pad_bucket_rows(arr: jnp.ndarray, e_pad: int, fill: int) -> jnp.ndarray:
+    pad = e_pad - int(arr.shape[0])
+    if pad <= 0:
+        return arr
+    return jnp.concatenate(
+        [arr, jnp.full((pad, arr.shape[1]), fill, arr.dtype)]
+    )
+
+
+@dataclasses.dataclass
+class GraphBatch:
+    """A batch of graphs prepped under one ``ShapePolicy`` and stacked so the
+    whole batch is counted by ONE vmapped device dispatch.
+
+    Build via ``from_graphs``: each member runs the device-resident
+    intersection prep, the per-width buckets are harmonized to the maximum
+    policy-rounded extent across members (missing widths become all-padding
+    buckets, which count zero), and each width's (u, v) pairs are stacked
+    into (B, E, W) arrays. ``counts()`` then runs a single jitted program —
+    every bucket's vmapped intersection plus the cross-bucket sum — from the
+    shape-policy-keyed batch-executable cache. This is the
+    ``TriangleCounter.count_many`` fast path.
+    """
+
+    graphs: List[Any]
+    backend: str
+    interpret: bool
+    divisor: int
+    specs: tuple  # ((strategy, bitmap_bits, (e_pad, width)), ...) per bucket
+    arrays: List[jnp.ndarray]  # flattened (u, v) stacks, device-resident
+    meta: Dict[str, Any]
+    prep_seconds: float
+    executions: int = 0
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.graphs)
+
+    @property
+    def shape_keys(self) -> List[tuple]:
+        return [shape for _, _, shape in self.specs]
+
+    def counts(self) -> np.ndarray:
+        """(B,) exact triangle counts — one device dispatch for the batch."""
+        if not self.specs:
+            out = np.zeros(self.batch_size, dtype=np.int64)
+        else:
+            fn = get_batch_executable(self.specs, self.backend,
+                                      self.interpret, self.batch_size)
+            out = np.asarray(fn(*self.arrays), dtype=np.int64)
+        if self.divisor != 1:
+            assert (out % self.divisor == 0).all(), out
+            out //= self.divisor
+        self.executions += 1
+        return out
+
+    def block_until_ready(self) -> "GraphBatch":
+        for a in self.arrays:
+            a.block_until_ready()
+        return self
+
+    @classmethod
+    def from_graphs(cls, graphs: Sequence[Graph], options=None,
+                    **overrides) -> "GraphBatch":
+        """Prep + stack ``graphs`` under one options bag.
+
+        Args:
+          graphs: host ``Graph``s (any mix of sizes; the stacked layout is
+            the per-width maximum of the policy-rounded extents).
+          options: a ``CountOptions``; None builds one from ``**overrides``.
+            Must have ``backend="jnp"`` (the vmapped cores are the pure-jnp
+            paths) and ``prep_backend="device"``.
+
+        Raises:
+          ValueError: empty batch, or options outside the batchable regime.
+        """
+        from repro.core.options import CountOptions
+
+        if options is None:
+            options = CountOptions(**overrides)
+        elif overrides:
+            options = options.replace(**overrides)
+        graphs = list(graphs)
+        if not graphs:
+            raise ValueError("GraphBatch needs at least one graph")
+        if options.backend != "jnp":
+            raise ValueError(
+                f"GraphBatch requires backend='jnp' (vmapped pure-jnp "
+                f"cores); got {options.backend!r}"
+            )
+        if options.prep_backend != "device":
+            raise ValueError(
+                "GraphBatch requires prep_backend='device' (the stacked "
+                "layout is defined by the device prep's ShapePolicy)"
+            )
+        policy = options.resolved_shape_policy
+        interpret = options.resolved_interpret
+        t0 = time.perf_counter()
+        per_graph = [
+            prep.prepare_intersection_buckets_device(
+                g, variant=options.variant, widths=options.widths,
+                policy=policy,
+            )
+            for g in graphs
+        ]
+        # harmonize: per width, every member is padded to the max rounded
+        # extent; members without that width contribute all-padding buckets
+        widths_union = sorted({b.width for bs in per_graph for b in bs})
+        id_range = max(g.n for g in graphs) + 2
+        specs, arrays = [], []
+        for w in widths_union:
+            members = [
+                {b.width: b for b in bs}.get(w) for bs in per_graph
+            ]
+            e_pad = max(policy.round_edges(1) if b is None else b.e_pad
+                        for b in members)
+            us, vs = [], []
+            for b in members:
+                if b is None:
+                    us.append(jnp.full((e_pad, w), -1, jnp.int32))
+                    vs.append(jnp.full((e_pad, w), -2, jnp.int32))
+                else:
+                    us.append(_pad_bucket_rows(b.u_lists, e_pad, -1))
+                    vs.append(_pad_bucket_rows(b.v_lists, e_pad, -2))
+            strat, bits = _resolve_bucket_strategy(
+                w, id_range, options.strategy, options.bitmap_bits
+            )
+            specs.append((strat, bits, (e_pad, w)))
+            arrays.extend([jnp.stack(us), jnp.stack(vs)])
+        prep_seconds = time.perf_counter() - t0
+        meta = dict(
+            batch_size=len(graphs),
+            variant=options.variant,
+            widths=tuple(options.widths),
+            strategy=options.strategy,
+            shape_policy=policy.key(),
+            prep_backend="device",
+            bucket_shapes=[s[2] for s in specs],
+            bucket_strategies=[(s[2][1], s[0]) for s in specs],
+            graphs=[g.name for g in graphs],
+        )
+        return cls(
+            graphs=graphs,
+            backend=options.backend,
+            interpret=interpret,
+            divisor=6 if options.variant == "full" else 1,
+            specs=tuple(specs),
+            arrays=arrays,
+            meta=meta,
+            prep_seconds=prep_seconds,
+        )

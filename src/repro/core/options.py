@@ -24,11 +24,14 @@ import dataclasses
 import os
 from typing import Optional, Tuple, Union
 
+from repro.graphs.device import DEFAULT_SHAPE_POLICY, ShapePolicy
+
 __all__ = [
     "BACKENDS",
     "CountOptions",
     "DEFAULT_INTERPRET",
     "DEFAULT_WIDTHS",
+    "PREP_BACKENDS",
     "VARIANTS",
     "resolve_interpret",
 ]
@@ -37,6 +40,7 @@ DEFAULT_WIDTHS: Tuple[int, ...] = (8, 32, 128, 512)
 
 VARIANTS = ("filtered", "full")
 BACKENDS = ("jnp", "pallas", "ref")
+PREP_BACKENDS = ("device", "host")
 
 _FALSY = ("0", "false", "no", "off", "")
 
@@ -81,12 +85,21 @@ class CountOptions:
       bitmap_bits: optional forced packed-bitmap capacity (multiple of 32)
         for bitmap-strategy buckets; None (default) sizes it from the
         bucket's id range via ``resolve_strategy``.
+      prep_backend: where the intersection/subgraph plan stage runs —
+        "device" (default: the jitted prep in ``repro.core.prep`` /
+        ``repro.graphs.device``) or "host" (the numpy parity path). The
+        matrix lane's tile schedule is host-side either way.
+      shape_policy: the ``ShapePolicy`` rounding data-dependent prep extents
+        into static shape classes; None (default) means
+        ``DEFAULT_SHAPE_POLICY`` (pow2 rounding). Part of the cache key:
+        same-policy graphs share traced prep stages and counting
+        executables, which is what makes ``count_many`` batchable.
 
     Frozen ⇒ hashable: equal options hash equal, and the engine's
     executable-cache keys are functions of these fields, so equal options
     share cached executables. ``key()`` returns the normalized hashable
-    tuple (with ``interpret=None`` resolved) used wherever options
-    participate in a cache key.
+    tuple (with ``interpret=None`` and ``shape_policy=None`` resolved) used
+    wherever options participate in a cache key.
     """
 
     algorithm: str = "auto"
@@ -98,6 +111,8 @@ class CountOptions:
     block: Union[int, str] = "auto"
     permute: bool = True
     bitmap_bits: Optional[int] = None
+    prep_backend: str = "device"
+    shape_policy: Optional[ShapePolicy] = None
 
     def __post_init__(self):
         # normalize widths to a tuple of ints so the dataclass stays hashable
@@ -156,20 +171,39 @@ class CountOptions:
                     f"bitmap_bits must be a positive multiple of 32 ≤ "
                     f"{BITMAP_MAX_BITS}, got {b!r}"
                 )
+        if self.prep_backend not in PREP_BACKENDS:
+            raise ValueError(
+                f"unknown prep_backend {self.prep_backend!r}; expected one "
+                f"of {PREP_BACKENDS}"
+            )
+        if self.shape_policy is not None and \
+                not isinstance(self.shape_policy, ShapePolicy):
+            raise ValueError(
+                f"shape_policy must be None or a ShapePolicy, "
+                f"got {self.shape_policy!r}"
+            )
 
     @property
     def resolved_interpret(self) -> bool:
         """The concrete interpret flag (``None`` ⇒ ``DEFAULT_INTERPRET``)."""
         return resolve_interpret(self.interpret)
 
+    @property
+    def resolved_shape_policy(self) -> ShapePolicy:
+        """The concrete ``ShapePolicy`` (``None`` ⇒ ``DEFAULT_SHAPE_POLICY``)."""
+        return self.shape_policy if self.shape_policy is not None \
+            else DEFAULT_SHAPE_POLICY
+
     def key(self) -> tuple:
         """Normalized hashable identity: the fields the engine's executable
-        cache keys derive from, with ``interpret=None`` resolved — so options
-        differing only in explicit-vs-default interpret hash alike."""
+        cache keys derive from, with ``interpret=None`` and
+        ``shape_policy=None`` resolved — so options differing only in
+        explicit-vs-default values hash alike."""
         return (
             self.algorithm, self.variant, self.backend,
             self.resolved_interpret, self.strategy, self.widths,
             self.block, self.permute, self.bitmap_bits,
+            self.prep_backend, self.resolved_shape_policy.key(),
         )
 
     def replace(self, **changes) -> "CountOptions":
@@ -186,11 +220,15 @@ class CountOptions:
         if lane == "intersection":
             return dict(variant=self.variant, backend=self.backend,
                         interpret=self.interpret, widths=self.widths,
-                        strategy=self.strategy, bitmap_bits=self.bitmap_bits)
+                        strategy=self.strategy, bitmap_bits=self.bitmap_bits,
+                        prep_backend=self.prep_backend,
+                        shape_policy=self.shape_policy)
         if lane == "subgraph":
             return dict(backend=self.backend, interpret=self.interpret,
                         widths=self.widths, strategy=self.strategy,
-                        bitmap_bits=self.bitmap_bits)
+                        bitmap_bits=self.bitmap_bits,
+                        prep_backend=self.prep_backend,
+                        shape_policy=self.shape_policy)
         if lane == "matrix":
             return dict(backend=self.backend, interpret=self.interpret,
                         block=self.block, permute=self.permute)

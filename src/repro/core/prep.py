@@ -1,0 +1,394 @@
+"""Per-lane prep stages: device-resident (jitted) with host parity paths.
+
+The paper's pipeline for every method splits into a *prep stage* (filtering,
+orientation, degree-class grouping, tile scheduling) and a *count stage* (the
+kernels §4 measures). PR 1 made the split explicit (plan/execute); this
+module moves the prep stage itself onto the device: the intersection and
+subgraph lanes' orientation, bucketing, padded gathers, 2-core peel, and
+induced-subgraph reform all run as the jitted stages in
+``repro.graphs.device``, orchestrated here per lane. The only host↔device
+traffic during planning is a handful of scalar syncs (per-bucket counts, the
+max forward degree, the peel's survivor count) needed to pick static shapes —
+which a ``ShapePolicy`` rounds to powers of two so same-policy graphs share
+every traced stage.
+
+Lanes:
+
+* ``prepare_intersection_buckets_device`` — orientation + bucket layout +
+  padded gathers for the intersection lane (and the subgraph lane's join),
+  returning device-resident ``DeviceBucket``s.
+* ``peel_to_two_core_device`` / ``induced_device_graph`` — the subgraph
+  lane's FILTER + RECONSTRUCT as device stages (vertex ids are kept, not
+  renumbered: dead vertices just lose their rows).
+* ``build_tile_schedule`` / ``choose_block`` — the matrix lane's prep. The
+  BSR triple join's output size is data-dependent in a way static shapes
+  can't express cheaply, so this stage stays host-side (documented in
+  ``docs/ARCHITECTURE.md``); it lives here so every lane's prep has one
+  home.
+* ``prepare_intersection_buckets_host`` / ``peel_to_two_core`` — the
+  original numpy paths, kept as parity references (``prep_backend="host"``
+  and ``tests/test_prep_parity.py`` compare the device stages against them)
+  and for host-side consumers of bucket dicts (the strat benchmark sweep,
+  labeled subgraph queries).
+
+``repro.core.engine`` re-exports the historical names
+(``prepare_intersection_buckets``, ``build_tile_schedule``,
+``peel_to_two_core``, ``choose_block``) as thin wrappers over this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graphs.formats import (
+    Graph,
+    apply_permutation,
+    bucket_edges_by_degree,
+    csr_to_padded_neighbors,
+    degree_order_permutation,
+    orient_forward,
+    to_block_sparse,
+)
+from repro.graphs.device import (
+    DEFAULT_SHAPE_POLICY,
+    DeviceCSR,
+    DeviceGraph,
+    ShapePolicy,
+    next_pow2,
+    _bucket_sort_dev,
+    _gather_bucket_dev,
+    _induced_compact_dev,
+    _two_core_peel_dev,
+)
+from repro.core.options import DEFAULT_WIDTHS
+
+__all__ = [
+    "DeviceBucket",
+    "build_tile_schedule",
+    "choose_block",
+    "induced_device_graph",
+    "peel_to_two_core",
+    "peel_to_two_core_device",
+    "prepare_intersection_buckets_device",
+    "prepare_intersection_buckets_host",
+]
+
+
+# ---------------------------------------------------------------------------
+# Device prep — the intersection/subgraph lanes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DeviceBucket:
+    """One degree-class bucket, device-resident and statically shaped.
+
+    ``u_lists``/``v_lists`` are (e_pad, width) int32 sorted neighbor lists;
+    the first ``edges`` rows are real, the rest whole-row padding (u = -1,
+    v = -2 ⇒ zero matches). ``src``/``dst`` are the per-row edge endpoints
+    (padding rows carry 0, harmless because their match counts are zero).
+    """
+
+    width: int
+    edges: int
+    u_lists: jnp.ndarray
+    v_lists: jnp.ndarray
+    src: jnp.ndarray
+    dst: jnp.ndarray
+
+    @property
+    def e_pad(self) -> int:
+        return int(self.u_lists.shape[0])
+
+    @property
+    def shape(self) -> tuple:
+        return (self.e_pad, self.width)
+
+
+def _as_device_graph(g: Union[Graph, DeviceGraph],
+                     policy: Optional[ShapePolicy]) -> DeviceGraph:
+    if isinstance(g, DeviceGraph):
+        return g
+    return DeviceGraph.from_graph(g, policy or DEFAULT_SHAPE_POLICY)
+
+
+def prepare_intersection_buckets_device(
+    g: Union[Graph, DeviceGraph],
+    *,
+    variant: str = "filtered",
+    widths: Sequence[int] = DEFAULT_WIDTHS,
+    policy: Optional[ShapePolicy] = None,
+) -> List[DeviceBucket]:
+    """Device-resident intersection prep: orientation + bucket layout +
+    padded neighbor gathers, all jitted.
+
+    Args:
+      g: a host ``Graph`` (uploaded once) or an existing ``DeviceGraph``.
+      variant: "filtered" (forward orientation; each triangle found once) or
+        "full" (all directed edges with full lists; each found 6×).
+      widths: ascending degree-class bucket widths; wider edges land in a
+        final next-pow2 bucket, exactly as the host path.
+      policy: the ``ShapePolicy`` rounding per-bucket extents (ignored when
+        ``g`` is already a ``DeviceGraph``, which carries its own).
+
+    Returns:
+      A list of ``DeviceBucket``; empty degree classes are dropped. Host
+      syncs: one small transfer for the per-bucket counts and max degree —
+      everything else stays on device.
+    """
+    if variant not in ("filtered", "full"):
+        raise ValueError(
+            f"unknown variant {variant!r}; expected 'filtered' or 'full'"
+        )
+    dg = _as_device_graph(g, policy)
+    n = dg.n
+    if dg.m == 0:
+        return []
+
+    if variant == "filtered":
+        fwd = dg.forward()
+        src, dst, valid = fwd.src, fwd.dst, fwd.kvalid
+        deg = fwd.degrees
+    else:
+        src, dst, valid = dg.edge_sources(), dg.csr.col_idx, dg.edge_valid()
+        deg = dg.csr.degrees
+
+    # one scalar sync to pick the static top-bucket width
+    dmax = int(jnp.max(deg))
+    bounds = [int(w) for w in widths]
+    if dmax > bounds[-1]:
+        bounds.append(next_pow2(dmax))
+    ssrc, sdst, counts, starts = _bucket_sort_dev(
+        src, dst, valid, deg, jnp.asarray(bounds, jnp.int32),
+        n=n, num_bounds=len(bounds),
+    )
+    counts_h = np.asarray(counts)  # one small sync for static extents
+    nbrs = dg.padded_neighbors(bounds[-1], oriented=(variant == "filtered"))
+
+    out = []
+    for i, w in enumerate(bounds):
+        c = int(counts_h[i])
+        if c == 0:
+            continue
+        e_pad = dg.policy.round_edges(c)
+        u, v, sb, db = _gather_bucket_dev(
+            ssrc, sdst, starts[i], counts[i], nbrs,
+            n=n, e_pad=e_pad, width=w,
+        )
+        out.append(DeviceBucket(width=w, edges=c, u_lists=u, v_lists=v,
+                                src=sb, dst=db))
+    return out
+
+
+def peel_to_two_core_device(dg: DeviceGraph) -> jnp.ndarray:
+    """Device 2-core peel (the subgraph lane's FILTER taken to fixed point).
+
+    Returns the (n,) bool alive mask as a device array.
+    """
+    if dg.m == 0:
+        return jnp.zeros(dg.n, dtype=bool)
+    return _two_core_peel_dev(
+        dg.edge_sources(), dg.csr.col_idx, dg.edge_valid(),
+        jnp.ones(dg.n, dtype=bool), n=dg.n,
+    )
+
+
+def induced_device_graph(dg: DeviceGraph, alive: jnp.ndarray) -> DeviceGraph:
+    """RECONSTRUCT on device: keep edges with both endpoints alive.
+
+    Vertex ids are preserved (dead vertices keep ids but lose their rows),
+    so per-vertex scatters downstream stay in original-id space — the
+    renumbering the host path does is an artifact of compact numpy arrays,
+    not of the algorithm. One scalar sync (the survivor edge count) picks
+    the policy-rounded static extent of the compacted arrays.
+    """
+    row_ptr_sub, col, kept_dev = _induced_compact_dev(
+        dg.csr.row_ptr, dg.csr.col_idx, alive, dg.m,
+        n=dg.n, m_pad=dg.csr.m_pad,
+    )
+    kept = int(kept_dev)
+    m_pad_sub = dg.policy.round_edges(kept)
+    csr = DeviceCSR(n=dg.n, m=kept, row_ptr=row_ptr_sub,
+                    col_idx=col[:m_pad_sub])
+    return DeviceGraph(csr, policy=dg.policy, name=dg.name + "+sub")
+
+
+# ---------------------------------------------------------------------------
+# Host parity paths (numpy) — prep_backend="host" and the parity tests
+# ---------------------------------------------------------------------------
+
+def prepare_intersection_buckets_host(
+    g: Graph,
+    variant: str = "filtered",
+    widths: Sequence[int] = DEFAULT_WIDTHS,
+) -> list:
+    """The original numpy intersection prep, kept as the parity reference.
+
+    Args:
+      g: undirected simple ``Graph``.
+      variant: "filtered" — forward orientation (rank = (degree, id)), the
+        paper's "filter out half of the edges by degree order"; the oriented
+        rows double as the reformed induced subgraph's neighbor lists.
+        "full" — all directed edges with full neighbor lists (each triangle
+        found 6×), the tc-intersection-full ablation.
+      widths: ascending degree-class bucket widths; edges wider than
+        ``widths[-1]`` land in a final next-pow2 bucket.
+
+    Returns:
+      A list of dicts ``{u_lists, v_lists, src, dst, width}``, one per
+      non-empty degree-class bucket. ``u_lists``/``v_lists`` are (E_b, W_b)
+      int32 numpy arrays of sorted neighbor lists; ``src``/``dst`` are the
+      (E_b,) edge endpoints each row belongs to (per-vertex analysis scatters
+      through them). Sentinel-padding rule: u rows pad with ``n``, v rows
+      with ``n + 1`` (never equal ⇒ padding contributes zero matches); both
+      sentinels sort above every real id, keeping rows sorted.
+    """
+    if variant == "filtered":
+        dag = orient_forward(g)
+        src, dst = dag.edge_endpoints()
+        deg = dag.degrees
+        base = dag
+    elif variant == "full":
+        src, dst = g.edge_endpoints()
+        deg = g.degrees
+        base = g
+    else:
+        raise ValueError(
+            f"unknown variant {variant!r}; expected 'filtered' or 'full'"
+        )
+
+    buckets = bucket_edges_by_degree(src, dst, deg, widths=widths)
+    out = []
+    for b in buckets:
+        w = b["width"]
+        nbrs = csr_to_padded_neighbors(base, pad_to=max(w, 1), fill=g.n)
+        u_lists = nbrs[b["src"]]
+        v_lists = nbrs[b["dst"]].copy()
+        v_lists[v_lists == g.n] = g.n + 1  # disjoint sentinel
+        out.append(dict(u_lists=u_lists, v_lists=v_lists,
+                        src=b["src"], dst=b["dst"], width=w))
+    return out
+
+
+def peel_to_two_core(g: Graph, labels: Optional[np.ndarray] = None,
+                     query_label: Optional[int] = None) -> np.ndarray:
+    """INITIALIZE_CANDIDATE_SET + iterated filter, to fixed point (host API).
+
+    Args:
+      g: undirected simple ``Graph``.
+      labels: optional (n,) vertex labels for labeled subgraph queries.
+      query_label: with ``labels``, prune vertices whose label cannot match
+        any query vertex before the degree peel.
+
+    Returns:
+      Bool (n,) numpy mask of vertices surviving the 2-core peel (every
+      triangle vertex has ≥ 2 alive neighbors, so counting on the induced
+      subgraph is exact).
+    """
+    src, dst = g.edge_endpoints()
+    init = np.ones(g.n, dtype=bool)
+    if labels is not None and query_label is not None:
+        init &= np.asarray(labels) == query_label
+    if g.m_directed == 0:
+        return np.zeros(g.n, dtype=bool)
+    alive = _two_core_peel(jnp.asarray(src), jnp.asarray(dst),
+                           jnp.asarray(init), n=g.n)
+    return np.asarray(alive)
+
+
+def _two_core_peel(src: jnp.ndarray, dst: jnp.ndarray,
+                   init_alive: jnp.ndarray, *, n: int) -> jnp.ndarray:
+    """Unmasked fixed-point peel over a concrete edge list (host callers)."""
+    valid = jnp.ones(src.shape[0], dtype=bool)
+    return _two_core_peel_dev(src, dst, valid, init_alive, n=n)
+
+
+# ---------------------------------------------------------------------------
+# Matrix lane prep (host stage — see module docstring)
+# ---------------------------------------------------------------------------
+
+def choose_block(g: Graph) -> int:
+    """Adaptive tile size (§Perf hillclimb, beyond-paper): degree-permuted
+    scale-free graphs densify the bottom-right tile cluster, so 128 (MXU
+    native) wins; mesh-like graphs (low, uniform degree) never fill tiles —
+    measured 40,000× MXU-flop waste and 25× wall-time regression at 128 vs
+    32 on road-like — so low-avg-degree graphs get small tiles."""
+    avg_deg = 2.0 * g.m_undirected / max(g.n, 1)
+    return 128 if avg_deg >= 8.0 else 32
+
+
+def build_tile_schedule(
+    g: Graph, block: int = 128, permute: bool = True
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, dict]:
+    """Host-side stage of the matrix method: degree permutation + BSR tiling +
+    the L/U/A triple schedule.
+
+    Args:
+      g: undirected simple ``Graph``.
+      block: dense tile edge length B (128 = MXU native).
+      permute: apply the degree-order permutation first (the paper's
+        tc-matrix step 1).
+
+    Returns:
+      (l_tiles, u_tiles, a_tiles, stats): three stacked (T, B, B) float32
+      arrays — the L tile, U tile, and A mask tile of each scheduled triple —
+      plus a stats dict (num_triples, tile counts, grid, block, tile_flops).
+      Triples are sorted heavy-first (by block density product); that order is
+      the unit of distribution for multi-device TC (core/distributed.py deals
+      it round-robin for static load balance — the TPU analogue of
+      merge-path's equal-work splitting).
+    """
+    if permute:
+        perm = degree_order_permutation(g)
+        g = apply_permutation(g, perm)
+    a_bsr = to_block_sparse(g, block=block, part="upper")  # mask: strict upper
+    l_bsr = to_block_sparse(g, block=block, part="lower")
+    u_bsr = to_block_sparse(g, block=block, part="upper")
+
+    # block-row index of L: row -> list of (K, tile_id); block-col index of U
+    l_rows: dict = {}
+    for t in range(l_bsr.num_blocks):
+        l_rows.setdefault(int(l_bsr.block_row[t]), []).append(
+            (int(l_bsr.block_col[t]), t)
+        )
+    u_cols: dict = {}
+    for t in range(u_bsr.num_blocks):
+        u_cols.setdefault(int(u_bsr.block_col[t]), []).append(
+            (int(u_bsr.block_row[t]), t)
+        )
+
+    trip_l, trip_u, trip_a = [], [], []
+    for t in range(a_bsr.num_blocks):
+        bi, bj = int(a_bsr.block_row[t]), int(a_bsr.block_col[t])
+        lk = dict(l_rows.get(bi, ()))
+        uk = dict(u_cols.get(bj, ()))
+        for k in lk.keys() & uk.keys():
+            trip_a.append(t)
+            trip_l.append(lk[k])
+            trip_u.append(uk[k])
+
+    T = len(trip_a)
+    stats = dict(
+        num_triples=T,
+        a_tiles=a_bsr.num_blocks,
+        l_tiles=l_bsr.num_blocks,
+        u_tiles=u_bsr.num_blocks,
+        grid=a_bsr.grid,
+        block=block,
+        tile_flops=2 * T * block**3,
+    )
+    if T == 0:
+        z = np.zeros((0, block, block), dtype=np.float32)
+        return z, z, z, stats
+
+    l_sel = l_bsr.blocks[np.asarray(trip_l)]
+    u_sel = u_bsr.blocks[np.asarray(trip_u)]
+    a_sel = a_bsr.blocks[np.asarray(trip_a)]
+    # heavy-first ordering by nnz(L)·nnz(U) so chunked execution and
+    # round-robin sharding see a monotone work profile
+    work = l_sel.sum(axis=(1, 2)) * u_sel.sum(axis=(1, 2))
+    order = np.argsort(-work, kind="stable")
+    return l_sel[order], u_sel[order], a_sel[order], stats

@@ -32,7 +32,8 @@ from repro.graphs.formats import Graph
 from repro.core.engine import (
     DEFAULT_WIDTHS,
     plan_triangle_count,
-    prepare_intersection_buckets,  # re-export (prep now lives in the engine)
+    prepare_intersection_buckets,  # re-export (prep lives in repro.core.prep;
+    # the plan stage runs the device-resident pipeline by default)
 )
 from repro.core.registry import register_algorithm
 

@@ -38,7 +38,7 @@ from typing import Optional
 
 from repro.graphs.formats import Graph
 from repro.core.engine import (
-    build_tile_schedule,  # re-export (prep now lives in the engine)
+    build_tile_schedule,  # re-export (prep lives in repro.core.prep)
     choose_block,  # re-export
     plan_triangle_count,
 )

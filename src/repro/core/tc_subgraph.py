@@ -37,9 +37,9 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.graphs.formats import Graph, induced_subgraph
+from repro.core.prep import _two_core_peel
 from repro.core.engine import (
-    _two_core_peel,
-    peel_to_two_core,  # re-export (prep now lives in the engine)
+    peel_to_two_core,  # re-export (prep lives in repro.core.prep)
     plan_triangle_count,
 )
 from repro.core.options import resolve_interpret

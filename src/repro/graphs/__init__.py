@@ -8,6 +8,12 @@ from repro.graphs.formats import (
     to_block_sparse,
     induced_subgraph,
 )
+from repro.graphs.device import (
+    DEFAULT_SHAPE_POLICY,
+    DeviceCSR,
+    DeviceGraph,
+    ShapePolicy,
+)
 from repro.graphs.generators import (
     rmat_graph,
     grid_graph,
@@ -22,6 +28,10 @@ from repro.graphs.datasets import DATASETS, available_datasets, load_dataset
 __all__ = [
     "Graph",
     "BlockSparse",
+    "DeviceCSR",
+    "DeviceGraph",
+    "ShapePolicy",
+    "DEFAULT_SHAPE_POLICY",
     "edges_to_csr",
     "csr_to_padded_neighbors",
     "degree_order_permutation",

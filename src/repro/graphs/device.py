@@ -1,0 +1,466 @@
+"""Device-resident graph containers and jitted prep primitives.
+
+Everything the triangle-counting *prep* stage used to do in per-graph host
+numpy — CSR construction, degree-rank forward orientation, padded neighbor
+gathers, degree-class bucket layout — reformulated as statically-shaped JAX
+computations so batch workloads are kernel-bound, not prep-bound (the
+TRUST-style decoupling of GPU-resident preprocessing from counting, and the
+Wang & Owens formulation of orientation/filtering as device primitives).
+
+Static shapes are the whole game: every jitted stage here is keyed on shapes
+only, so the retrace/recompile cost is paid once per *shape class*, not once
+per graph. ``ShapePolicy`` defines the shape classes — it rounds every
+data-dependent extent (edge-array lengths, per-bucket edge counts) up to the
+next power of two, padding with the repo-wide whole-row sentinels (``-1`` for
+u rows, ``-2`` for v rows, which every intersection core treats as zero
+matches). Two graphs prepped under the same policy whose rounded extents
+collide share every traced prep stage AND every counting executable — which
+is what lets ``GraphBatch`` (see ``repro.core.engine``) stack a whole batch
+of generated graphs into one vmapped device dispatch.
+
+Containers:
+
+* ``DeviceCSR``   — the raw device-resident CSR arrays (``row_ptr``,
+                    ``col_idx`` padded to a policy-rounded length), plus a
+                    jitted sort-based builder ``from_edges``.
+* ``DeviceGraph`` — a ``DeviceCSR`` + ``ShapePolicy`` with cached derived
+                    structure: the forward-oriented edge set, padded
+                    neighbor matrices, and the bucket sort the prep lanes
+                    in ``repro.core.prep`` consume.
+
+Sentinel conventions (repo-wide, see ``repro.kernels.intersect.ops``): in-row
+padding uses ``n`` (u side) / ``n + 1`` (v side); whole padding rows use
+``-1`` / ``-2``; padded ``col_idx`` slots use ``n``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.formats import Graph
+
+__all__ = [
+    "DEFAULT_SHAPE_POLICY",
+    "DeviceCSR",
+    "DeviceGraph",
+    "ShapePolicy",
+    "next_pow2",
+]
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two ≥ ``x`` (and ≥ 1)."""
+    x = int(x)
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapePolicy:
+    """How data-dependent extents are rounded into static shape classes.
+
+    Attributes:
+      edge_rounding: "pow2" (default) rounds every edge extent — uploaded
+        ``col_idx`` length, per-bucket edge counts — up to the next power of
+        two, so same-policy graphs of similar size land in identical shape
+        classes and share traced prep stages and counting executables.
+        "exact" keeps true extents (minimal padding, maximal retracing) —
+        the parity-testing configuration.
+      min_edges: floor on any rounded extent; keeps tiny buckets from
+        fragmenting the executable cache into near-duplicate shapes.
+
+    Frozen ⇒ hashable: a policy participates in ``CountOptions`` equality
+    and therefore in the engine's executable-cache keys (``key()`` is the
+    normalized tuple used there).
+    """
+
+    edge_rounding: str = "pow2"
+    min_edges: int = 8
+
+    def __post_init__(self):
+        if self.edge_rounding not in ("pow2", "exact"):
+            raise ValueError(
+                f"edge_rounding must be 'pow2' or 'exact', "
+                f"got {self.edge_rounding!r}"
+            )
+        if not isinstance(self.min_edges, int) or isinstance(self.min_edges, bool) \
+                or self.min_edges < 1:
+            raise ValueError(
+                f"min_edges must be a positive int, got {self.min_edges!r}"
+            )
+
+    def round_edges(self, count: int) -> int:
+        """The static extent an array of ``count`` edge rows is padded to."""
+        count = int(count)
+        if self.edge_rounding == "exact":
+            return max(count, 1)
+        return max(self.min_edges, next_pow2(count))
+
+    def key(self) -> tuple:
+        """Hashable identity used in options/cache keys."""
+        return (self.edge_rounding, self.min_edges)
+
+
+DEFAULT_SHAPE_POLICY = ShapePolicy()
+
+
+# ---------------------------------------------------------------------------
+# Jitted primitives — every static_argnames set is a shape class
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n", "m_pad"))
+def _edge_sources(row_ptr: jnp.ndarray, *, n: int, m_pad: int) -> jnp.ndarray:
+    """src[i] = CSR row owning slot i (the device analogue of np.repeat)."""
+    slots = jnp.arange(m_pad, dtype=jnp.int32)
+    src = jnp.searchsorted(row_ptr, slots, side="right") - 1
+    return jnp.clip(src, 0, max(n - 1, 0)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m_pad"))
+def _csr_from_edges(src: jnp.ndarray, dst: jnp.ndarray, valid: jnp.ndarray,
+                    *, n: int, m_pad: int):
+    """Sort-based CSR build from a (possibly unsorted, masked) edge list.
+
+    Assumes the valid (src, dst) pairs are deduplicated directed edges.
+    Invalid slots sort to the end. Returns (row_ptr, col_idx, m) where
+    ``col_idx`` is padded with the sentinel ``n`` and ``m`` is the valid
+    edge count (a device scalar). Keys are int32 (x64 is off by default),
+    so the caller guards ``(n + 1)² ≤ int32 max``.
+    """
+    big = jnp.iinfo(jnp.int32).max
+    key = jnp.where(
+        valid,
+        src.astype(jnp.int32) * jnp.int32(n + 1) + dst.astype(jnp.int32),
+        jnp.int32(big),
+    )
+    order = jnp.argsort(key)
+    skey = key[order]
+    m = valid.sum()
+    col = jnp.where(jnp.arange(m_pad) < m, dst[order], n).astype(jnp.int32)
+    row_starts = jnp.arange(n + 1, dtype=jnp.int32) * jnp.int32(n + 1)
+    row_ptr = jnp.searchsorted(skey, row_starts, side="left").astype(jnp.int32)
+    return row_ptr, col, m
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m_pad", "mf_pad"))
+def _orient_forward_dev(row_ptr: jnp.ndarray, col_idx: jnp.ndarray,
+                        m, *, n: int, m_pad: int, mf_pad: int):
+    """Degree-rank forward orientation, compacted to static shape.
+
+    Keeps u→v iff rank(u) < rank(v) with rank = (degree, id) — the paper's
+    'filter out half the edges by degree order'. The kept edges (exactly
+    m // 2 of them) occupy the leading slots of the returned arrays in CSR
+    order; ``kvalid`` marks them. Returns
+    (fwd_src, fwd_dst, kvalid, fwd_row_ptr, fwd_deg).
+    """
+    src = _edge_sources(row_ptr, n=n, m_pad=m_pad)
+    dst = col_idx
+    valid = jnp.arange(m_pad) < m
+    deg = jnp.diff(row_ptr)
+    du = deg[src]
+    dv = deg[jnp.clip(dst, 0, max(n - 1, 0))]
+    keep = valid & ((du < dv) | ((du == dv) & (src < dst)))
+    order = jnp.argsort(~keep)  # stable: kept edges first, CSR order intact
+    take = order[:mf_pad]
+    kvalid = keep[take]
+    fsrc = jnp.where(kvalid, src[take], 0).astype(jnp.int32)
+    fdst = jnp.where(kvalid, dst[take], 0).astype(jnp.int32)
+    fdeg = jax.ops.segment_sum(
+        kvalid.astype(jnp.int32), fsrc, num_segments=max(n, 1)
+    )[:n]
+    frow_ptr = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(fdeg).astype(jnp.int32)]
+    )
+    return fsrc, fdst, kvalid, frow_ptr, fdeg
+
+
+@functools.partial(jax.jit, static_argnames=("n", "width"))
+def _padded_neighbors_dev(src: jnp.ndarray, dst: jnp.ndarray,
+                          valid: jnp.ndarray, row_ptr: jnp.ndarray,
+                          *, n: int, width: int) -> jnp.ndarray:
+    """(n, width) neighbor matrix padded with the in-row sentinel ``n``.
+
+    Edge slot i lands at column ``i - row_ptr[src[i]]`` (edges are in CSR
+    order, so each row's slots are contiguous); invalid slots scatter out of
+    bounds and are dropped.
+    """
+    pos = jnp.arange(src.shape[0], dtype=jnp.int32) - row_ptr[src]
+    pos = jnp.where(valid, pos, width)  # out of bounds ⇒ dropped
+    out = jnp.full((n, width), n, dtype=jnp.int32)
+    return out.at[src, pos].set(dst.astype(jnp.int32), mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("n", "num_bounds"))
+def _bucket_sort_dev(src: jnp.ndarray, dst: jnp.ndarray, valid: jnp.ndarray,
+                     deg: jnp.ndarray, bounds: jnp.ndarray,
+                     *, n: int, num_bounds: int):
+    """Stable-sort edges into degree-class buckets.
+
+    Bucket of an edge = first bound ≥ max(deg[src], deg[dst]) (the paper's
+    TwoSmall/TwoLarge grouping, statically shaped); invalid slots sort into
+    a trailing overflow class. Returns (sorted_src, sorted_dst, counts,
+    starts) with counts/starts per real bucket.
+    """
+    lim = max(n - 1, 0)
+    w = jnp.maximum(deg[jnp.clip(src, 0, lim)], deg[jnp.clip(dst, 0, lim)])
+    b = jnp.searchsorted(bounds, w, side="left")
+    b = jnp.where(valid, b, num_bounds).astype(jnp.int32)
+    order = jnp.argsort(b)  # stable: CSR order preserved within a bucket
+    counts = jnp.bincount(b, length=num_bounds + 1)[:num_bounds]
+    starts = jnp.concatenate(
+        [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)]
+    )[:num_bounds]
+    return src[order], dst[order], counts, starts
+
+
+@functools.partial(jax.jit, static_argnames=("n", "e_pad", "width"))
+def _gather_bucket_dev(sorted_src: jnp.ndarray, sorted_dst: jnp.ndarray,
+                       start, count, nbrs: jnp.ndarray,
+                       *, n: int, e_pad: int, width: int):
+    """Materialize one bucket's padded (e_pad, width) neighbor-list pair.
+
+    Rows past ``count`` are whole-row padding: u = -1, v = -2 (disjoint ⇒
+    zero matches in every intersection core). Within real rows, u keeps the
+    in-row sentinel ``n`` and v's is rewritten to ``n + 1``. Returns
+    (u_lists, v_lists, src, dst); padded rows carry src = dst = 0, which is
+    safe for the per-vertex scatters because their match counts are zero.
+    """
+    rows = jnp.arange(e_pad)
+    bvalid = rows < count
+    lim = max(sorted_src.shape[0] - 1, 0)
+    idx = jnp.clip(start + rows, 0, lim)
+    sb = jnp.where(bvalid, sorted_src[idx], 0).astype(jnp.int32)
+    db = jnp.where(bvalid, sorted_dst[idx], 0).astype(jnp.int32)
+    u = jnp.where(bvalid[:, None], nbrs[sb, :width], -1).astype(jnp.int32)
+    vfull = nbrs[db, :width]
+    v = jnp.where(
+        bvalid[:, None], jnp.where(vfull == n, n + 1, vfull), -2
+    ).astype(jnp.int32)
+    return u, v, sb, db
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _two_core_peel_dev(src: jnp.ndarray, dst: jnp.ndarray,
+                       valid: jnp.ndarray, init_alive: jnp.ndarray, *, n: int):
+    """Fixed-point 2-core peel over a masked static edge list."""
+    lim = max(n - 1, 0)
+    dst_c = jnp.clip(dst, 0, lim)
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state):
+        alive, _ = state
+        contrib = (valid & alive[src] & alive[dst_c]).astype(jnp.int32)
+        deg = jax.ops.segment_sum(contrib, src, num_segments=n)
+        new_alive = alive & (deg >= 2)
+        return new_alive, jnp.any(new_alive != alive)
+
+    alive, _ = jax.lax.while_loop(cond, body, (init_alive, jnp.array(True)))
+    return alive
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m_pad"))
+def _induced_compact_dev(row_ptr: jnp.ndarray, col_idx: jnp.ndarray,
+                         alive: jnp.ndarray, m, *, n: int, m_pad: int):
+    """Compact the directed edges with both endpoints alive (CSR order kept).
+
+    Vertex ids are NOT renumbered — dead vertices simply end up with empty
+    rows, so downstream per-vertex scatters stay in original-id space.
+    Returns (row_ptr_sub, col_sub, kept) with ``col_sub`` padded with ``n``.
+    """
+    src = _edge_sources(row_ptr, n=n, m_pad=m_pad)
+    valid = jnp.arange(m_pad) < m
+    lim = max(n - 1, 0)
+    keep = valid & alive[src] & alive[jnp.clip(col_idx, 0, lim)]
+    order = jnp.argsort(~keep)  # stable compaction
+    ksrc = src[order]
+    kval = keep[order]
+    col = jnp.where(kval, col_idx[order], n).astype(jnp.int32)
+    deg = jax.ops.segment_sum(
+        kval.astype(jnp.int32), jnp.where(kval, ksrc, 0),
+        num_segments=max(n, 1),
+    )[:n]
+    row_ptr_sub = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(deg).astype(jnp.int32)]
+    )
+    return row_ptr_sub, col, keep.sum()
+
+
+# ---------------------------------------------------------------------------
+# Containers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DeviceCSR:
+    """Device-resident CSR arrays (undirected-symmetric or oriented).
+
+    ``col_idx`` is padded to a policy-rounded static length with the
+    sentinel ``n``; ``m`` is the true directed edge count.
+    """
+
+    n: int
+    m: int
+    row_ptr: jnp.ndarray  # (n+1,) int32
+    col_idx: jnp.ndarray  # (m_pad,) int32, padded with n
+
+    @property
+    def m_pad(self) -> int:
+        return int(self.col_idx.shape[0])
+
+    @property
+    def degrees(self) -> jnp.ndarray:
+        return jnp.diff(self.row_ptr)
+
+    @classmethod
+    def from_graph(cls, g: Graph,
+                   policy: ShapePolicy = DEFAULT_SHAPE_POLICY) -> "DeviceCSR":
+        """Upload a host ``Graph``, padding ``col_idx`` to the policy extent."""
+        m_pad = policy.round_edges(g.m_directed)
+        col = jnp.asarray(g.col_idx, dtype=jnp.int32)
+        pad = m_pad - g.m_directed
+        if pad:
+            col = jnp.concatenate([col, jnp.full(pad, g.n, jnp.int32)])
+        return cls(n=g.n, m=g.m_directed,
+                   row_ptr=jnp.asarray(g.row_ptr, dtype=jnp.int32),
+                   col_idx=col)
+
+    @classmethod
+    def from_edges(cls, src, dst, n: int, *, valid=None,
+                   policy: ShapePolicy = DEFAULT_SHAPE_POLICY) -> "DeviceCSR":
+        """Jitted sort-based CSR build from deduplicated directed edges.
+
+        Args:
+          src, dst: equal-length int arrays (device or host) of directed
+            edges; need not be sorted.
+          n: vertex count (static).
+          valid: optional bool mask of live slots (padding slots excluded).
+          policy: extent-rounding policy for the uploaded arrays.
+
+        Returns:
+          A ``DeviceCSR`` whose rows are sorted by destination id.
+
+        Raises:
+          ValueError: when ``(n + 1)²`` exceeds the int32 sort-key range
+            (n > ~46k; x64 is off by default, so keys are 32-bit).
+        """
+        if (n + 1) ** 2 > np.iinfo(np.int32).max:
+            raise ValueError(
+                f"DeviceCSR.from_edges sort keys need (n+1)^2 ≤ int32 max; "
+                f"n={n} is too large (use edges_to_csr + from_graph instead)"
+            )
+        src = jnp.asarray(src, dtype=jnp.int32)
+        dst = jnp.asarray(dst, dtype=jnp.int32)
+        if valid is None:
+            valid = jnp.ones(src.shape[0], dtype=bool)
+        m_pad = policy.round_edges(int(src.shape[0]))
+        pad = m_pad - int(src.shape[0])
+        if pad:
+            src = jnp.concatenate([src, jnp.zeros(pad, jnp.int32)])
+            dst = jnp.concatenate([dst, jnp.zeros(pad, jnp.int32)])
+            valid = jnp.concatenate([valid, jnp.zeros(pad, dtype=bool)])
+        row_ptr, col, m = _csr_from_edges(src, dst, valid, n=n, m_pad=m_pad)
+        return cls(n=int(n), m=int(m), row_ptr=row_ptr, col_idx=col)
+
+
+class _ForwardEdges:
+    """The degree-rank-oriented edge set of a ``DeviceGraph`` (cached)."""
+
+    def __init__(self, src, dst, kvalid, row_ptr, degrees, m: int):
+        self.src = src          # (mf_pad,) int32, kept edges first
+        self.dst = dst          # (mf_pad,) int32
+        self.kvalid = kvalid    # (mf_pad,) bool
+        self.row_ptr = row_ptr  # (n+1,) int32
+        self.degrees = degrees  # (n,) int32 forward out-degrees
+        self.m = m              # true kept edge count (= m_directed // 2)
+
+
+class DeviceGraph:
+    """A graph resident on device, with cached prep structure.
+
+    Wraps a ``DeviceCSR`` and a ``ShapePolicy``; the forward orientation and
+    padded neighbor matrices are computed lazily by jitted stages and cached
+    on the instance, so the intersection and subgraph prep lanes (see
+    ``repro.core.prep``) never rebuild them.
+    """
+
+    def __init__(self, csr: DeviceCSR, policy: ShapePolicy = DEFAULT_SHAPE_POLICY,
+                 name: str = "graph"):
+        self.csr = csr
+        self.policy = policy
+        self.name = name
+        self._fwd: Optional[_ForwardEdges] = None
+        self._nbrs: Dict[Tuple[int, bool], jnp.ndarray] = {}
+
+    # -- basic accessors ---------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.csr.n
+
+    @property
+    def m(self) -> int:
+        """True directed edge count."""
+        return self.csr.m
+
+    @property
+    def m_undirected(self) -> int:
+        return self.csr.m // 2
+
+    def edge_sources(self) -> jnp.ndarray:
+        """(m_pad,) CSR row of every directed edge slot."""
+        return _edge_sources(self.csr.row_ptr, n=self.n, m_pad=self.csr.m_pad)
+
+    def edge_valid(self) -> jnp.ndarray:
+        """(m_pad,) mask of live (non-padding) edge slots."""
+        return jnp.arange(self.csr.m_pad) < self.m
+
+    @classmethod
+    def from_graph(cls, g: Graph,
+                   policy: ShapePolicy = DEFAULT_SHAPE_POLICY) -> "DeviceGraph":
+        return cls(DeviceCSR.from_graph(g, policy), policy=policy, name=g.name)
+
+    # -- derived structure (jitted, cached) --------------------------------
+
+    def forward(self) -> _ForwardEdges:
+        """Degree-rank forward orientation (rank = (degree, id)), cached."""
+        if self._fwd is None:
+            mf_pad = max(1, self.csr.m_pad // 2)
+            fsrc, fdst, kvalid, frow_ptr, fdeg = _orient_forward_dev(
+                self.csr.row_ptr, self.csr.col_idx, self.m,
+                n=self.n, m_pad=self.csr.m_pad, mf_pad=mf_pad,
+            )
+            self._fwd = _ForwardEdges(fsrc, fdst, kvalid, frow_ptr, fdeg,
+                                      m=self.m // 2)
+        return self._fwd
+
+    def padded_neighbors(self, width: int, *, oriented: bool) -> jnp.ndarray:
+        """(n, width) neighbor matrix (in-row sentinel ``n``), cached.
+
+        ``oriented=True`` gathers the forward (N⁺) lists; ``False`` the full
+        undirected adjacency rows.
+        """
+        key = (int(width), bool(oriented))
+        if key not in self._nbrs:
+            if oriented:
+                fwd = self.forward()
+                self._nbrs[key] = _padded_neighbors_dev(
+                    fwd.src, fwd.dst, fwd.kvalid, fwd.row_ptr,
+                    n=self.n, width=int(width),
+                )
+            else:
+                self._nbrs[key] = _padded_neighbors_dev(
+                    self.edge_sources(), self.csr.col_idx, self.edge_valid(),
+                    self.csr.row_ptr, n=self.n, width=int(width),
+                )
+        return self._nbrs[key]
+
+    def __repr__(self) -> str:
+        return (f"DeviceGraph(name={self.name!r}, n={self.n}, "
+                f"m_undirected={self.m_undirected}, policy={self.policy})")

@@ -68,10 +68,15 @@ class Graph:
     def neighbors(self, v: int) -> np.ndarray:
         return self.col_idx[self.row_ptr[v] : self.row_ptr[v + 1]]
 
+    def edge_endpoints(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(src, dst) of every directed CSR slot — the COO view of the
+        graph, src[i] repeating each row id by its degree."""
+        src = np.repeat(np.arange(self.n, dtype=np.int32), self.degrees)
+        return src, self.col_idx
+
     def edge_list_unique(self) -> Tuple[np.ndarray, np.ndarray]:
         """(src, dst) with src < dst — one row per undirected edge."""
-        src = np.repeat(np.arange(self.n, dtype=np.int32), self.degrees)
-        dst = self.col_idx
+        src, dst = self.edge_endpoints()
         keep = src < dst
         return src[keep], dst[keep]
 
@@ -170,8 +175,7 @@ def apply_permutation(g: Graph, perm: np.ndarray) -> Graph:
     """Relabel graph so that new vertex i corresponds to old vertex perm[i]."""
     inv = np.empty_like(perm)
     inv[perm] = np.arange(g.n, dtype=np.int32)
-    src = np.repeat(np.arange(g.n, dtype=np.int32), g.degrees)
-    dst = g.col_idx
+    src, dst = g.edge_endpoints()
     return edges_to_csr(inv[src], inv[dst], n=g.n, name=g.name)
 
 
@@ -182,8 +186,7 @@ def orient_forward(g: Graph) -> Graph:
     degree order' step, and guarantees Σ d⁺(v)² = O(m^1.5) work.
     """
     d = g.degrees
-    src = np.repeat(np.arange(g.n, dtype=np.int32), d)
-    dst = g.col_idx
+    src, dst = g.edge_endpoints()
     du, dv = d[src], d[dst]
     keep = (du < dv) | ((du == dv) & (src < dst))
     src, dst = src[keep], dst[keep]
@@ -220,8 +223,7 @@ def induced_subgraph(g: Graph, vertex_mask: np.ndarray) -> Tuple[Graph, np.ndarr
     old_ids = np.nonzero(vertex_mask)[0].astype(np.int32)
     remap = np.full(g.n, -1, dtype=np.int64)
     remap[old_ids] = np.arange(old_ids.shape[0])
-    src = np.repeat(np.arange(g.n, dtype=np.int32), g.degrees)
-    dst = g.col_idx
+    src, dst = g.edge_endpoints()
     keep = vertex_mask[src] & vertex_mask[dst]
     sub = edges_to_csr(
         remap[src[keep]], remap[dst[keep]], n=int(old_ids.shape[0]), name=g.name + "+sub"
