@@ -28,6 +28,13 @@ Prints ``name,prep_us,count_us,derived`` CSV rows:
                loop of per-graph cached plans vs ONE vmapped ``GraphBatch``
                dispatch over the same graphs (derived records the
                loop/vmapped speedup). Tracks the batching win across PRs.
+  fig_truss_* — beyond-paper: k-truss peel sweep — the host path (listing's
+               numpy enumeration per round) vs the device edge lane
+               (cached per-edge support executables + the device peel
+               loop), one ``_host``/``_device`` row pair per graph plus a
+               clique-heavy fixture. Every pair asserts bit-identical
+               surviving edge sets; the device row's derived field records
+               the host/device speedup and the peel round count.
 
 Alongside the CSV, every executed figure is written as machine-readable
 ``BENCH_<figure>.json`` (rows + env + device + the exact argv) into
@@ -60,15 +67,16 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.graphs import DATASETS, load_dataset
+from repro.graphs import DATASETS, edges_to_csr, load_dataset
 from repro.core import (
     CountOptions, GraphBatch, TriangleCounter, triangle_count_scipy,
 )
 from repro.core.engine import get_executable, prepare_intersection_buckets
+from repro.core.listing import _k_truss_host
 from repro.kernels.intersect import (
     STRATEGIES, intersect_counts_probe, intersect_counts_ref, resolve_strategy,
 )
-from repro.graphs.generators import rmat_graph
+from repro.graphs.generators import complete_graph, rmat_graph
 from repro.configs.paper import DATASETS_FIG5, FIG6_SCALES, FIG6_EDGE_FACTOR
 
 _ROWS = []
@@ -314,12 +322,74 @@ def fig_batch(sizes, *, iters: int = 2, scale: int = 7,
               f"graphs={B};speedup={loop_us / max(batch_us, 1e-9):.2f}x")
 
 
+# fig_truss budget policy (single-core): the host path re-enumerates every
+# triangle per peel round, so under budget it only runs on graphs below this
+# edge count; skips are explicit rows (the device row still runs)
+_TRUSS_HOST_LIMIT = 150_000  # undirected edges
+_TRUSS_K = 4
+
+
+def _clique_heavy_graph(n_clique: int = 96, n_spurs: int = 64):
+    """The fig_truss fixture: one K_{n_clique} plus pendant spur edges off
+    vertex 0 — the regime the device peel wins hardest (wide dense
+    neighbor lists make the host path's per-round O(E·W²) eq tensors
+    expensive) while still peeling >1 round (the spurs go first)."""
+    base = complete_graph(n_clique)
+    src, dst = base.edge_list_unique()
+    spur_src = np.zeros(n_spurs, dtype=np.int64)
+    spur_dst = np.arange(n_clique, n_clique + n_spurs, dtype=np.int64)
+    return edges_to_csr(np.concatenate([src.astype(np.int64), spur_src]),
+                        np.concatenate([dst.astype(np.int64), spur_dst]),
+                        n=n_clique + n_spurs, name="clique-heavy")
+
+
+def fig_truss(datasets, *, budget: bool = True, iters: int = 2,
+              k: int = _TRUSS_K) -> None:
+    """k-truss peel: host enumeration (listing oracle) vs the device edge
+    lane.
+
+    One row pair per graph (the given datasets plus the clique-heavy
+    fixture): ``_host`` times ``listing._k_truss_host`` (full numpy peel,
+    re-enumerating triangles each round) and ``_device`` times
+    ``TriangleCounter.k_truss`` (cached edge executables + the device peel
+    loop). Every pair asserts the surviving edge sets are bit-identical;
+    the device row's derived field records the host/device speedup and the
+    peel round count.
+    """
+    graphs = [load_dataset(name) for name in datasets]
+    graphs.append(_clique_heavy_graph())
+    for g in graphs:
+        if budget and g.m_undirected > _TRUSS_HOST_LIMIT:
+            _emit(f"fig_truss_{g.name}_k{k}_host", 0.0, 0.0,
+                  "skipped(budget)")
+            host_us = None
+        else:
+            truth = _k_truss_host(g, k)
+            host_us = _time(lambda: _k_truss_host(g, k), iters=iters)
+            _emit(f"fig_truss_{g.name}_k{k}_host", 0.0, host_us,
+                  f"edges={truth.m_undirected}")
+        t0 = time.perf_counter()
+        tc = TriangleCounter(g, CountOptions(algorithm="edge"))
+        dev = tc.k_truss(k)  # builds the plan + compiles the peel stages
+        prep_us = (time.perf_counter() - t0) * 1e6
+        if host_us is not None:
+            assert dev.n == truth.n, g.name
+            assert np.array_equal(dev.row_ptr, truth.row_ptr), g.name
+            assert np.array_equal(dev.col_idx, truth.col_idx), g.name
+        dev_us = _time(lambda: tc.k_truss(k), iters=iters)
+        rounds = tc.plan.meta.get("peel_rounds")
+        derived = f"edges={dev.m_undirected};rounds={rounds}"
+        if host_us is not None:
+            derived += f";speedup={host_us / max(dev_us, 1e-9):.2f}x"
+        _emit(f"fig_truss_{g.name}_k{k}_device", prep_us, dev_us, derived)
+
+
 _SMOKE_DATASETS = ["tiny-rmat", "tiny-grid"]
 _SMOKE_SCALES = [7, 8]
 _BATCH_SIZES = (2, 4, 8, 16)
 _SMOKE_BATCH_SIZES = (4, 8)
 
-_FIGURES = ("table1", "fig5", "fig6", "strat", "fig_batch")
+_FIGURES = ("table1", "fig5", "fig6", "strat", "fig_batch", "fig_truss")
 
 
 def main() -> None:
@@ -357,6 +427,8 @@ def main() -> None:
         strat(datasets, iters=iters)
     if "fig_batch" in figures:
         fig_batch(batch_sizes, iters=iters)
+    if "fig_truss" in figures:
+        fig_truss(datasets, budget=budget, iters=iters)
     _write_json(figures, args.json_dir, args.smoke)
 
 

@@ -11,10 +11,15 @@ Public API:
         cached compiled kernels
     GraphBatch — same-policy graphs stacked into one vmapped device
         dispatch (the ``count_many`` fast path)
+    TrussPlan / plan_edge_support — the edge lane (``algorithm="edge"``):
+        cached per-edge support executables + the device k-truss peel loop
+        (surfaced as ``TriangleCounter.edge_support`` / ``k_truss`` /
+        ``truss_decomposition``)
     DEFAULT_INTERPRET / resolve_interpret — the single interpret-mode default
         (``TC_INTERPRET`` env var)
-    enumerate_triangles / k_truss / edge_support — host-side enumeration
-        applications (per-vertex analysis lives on ``TriangleCounter``)
+    enumerate_triangles — host-side triangle enumeration
+    k_truss / edge_support — DEPRECATED shims over the retained numpy parity
+        oracle; use the ``TriangleCounter`` methods
     triangle_count_scipy / triangle_count_brute / triangle_count_forward_cpu
         — oracles
     triangle_count_* (+ ``*_distributed``) — DEPRECATED one-shot shims over
@@ -37,9 +42,11 @@ from repro.core.engine import (
     STRATEGIES,
     GraphBatch,
     TrianglePlan,
+    TrussPlan,
     choose_strategy,
     clear_executable_cache,
     executable_cache_info,
+    plan_edge_support,
     plan_triangle_count,
     resolve_strategy,
 )
@@ -86,6 +93,8 @@ __all__ = [
     "STRATEGIES",
     "GraphBatch",
     "TrianglePlan",
+    "TrussPlan",
+    "plan_edge_support",
     "plan_triangle_count",
     "choose_strategy",
     "resolve_strategy",

@@ -15,10 +15,13 @@ typed options bag rather than three differently-shaped free functions:
 ``TriangleCounter`` owns ONE ``TrianglePlan`` (built lazily through the
 algorithm registry, ``repro.core.registry``): every ``count()`` is a device
 replay, ``count_many()`` maps the same options over a graph batch (same-shaped
-graphs share the process-wide executable cache), and the per-vertex analysis
-surface (``triangles_per_vertex`` / ``clustering_coefficients`` /
-``transitivity``) replays the plan's cached device buffers instead of
-``listing.py``'s engine-bypassing host enumeration.
+graphs share the process-wide executable cache), and the analysis surfaces
+replay cached device buffers instead of ``listing.py``'s engine-bypassing
+host enumeration: per-vertex (``triangles_per_vertex`` /
+``clustering_coefficients`` / ``transitivity``, the "vertex" executables)
+and per-edge (``edge_support`` / ``k_truss`` / ``truss_decomposition``, the
+"edge" executables plus the device k-truss peel loop — see
+``repro.core.engine.TrussPlan``).
 
 ``CountResult`` replaces the ``(int, dict)`` tuple of the old
 ``count_with_stats()``: the count plus which lane ran, per-bucket strategies,
@@ -147,6 +150,7 @@ class TriangleCounter:
                           else registry.choose_algorithm(g))
         self._plan = None
         self._vertex_counts: Optional[np.ndarray] = None
+        self._edge_sidecar = None
 
     @property
     def plan(self):
@@ -283,6 +287,46 @@ class TriangleCounter:
                     t = _vertex_counts_sidecar(self.graph, self.options)
             self._vertex_counts = t
         return self._vertex_counts.copy()
+
+    # -- per-edge analysis (support / k-truss), routed through the engine --
+
+    def _edge_plan(self):
+        """The session's edge-lane plan (``TrussPlan``): the session plan
+        itself when ``algorithm="edge"``, else a memoized sidecar built from
+        the same options — so equal options share the engine's cached edge
+        executables either way."""
+        if self.algorithm == "edge":
+            return self.plan
+        if self._edge_sidecar is None:
+            planner = registry.get_algorithm("edge")
+            self._edge_sidecar = planner(self.graph, self.options,
+                                         mesh=self.mesh)
+        return self._edge_sidecar
+
+    def edge_support(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(src, dst, support) with src < dst: per-undirected-edge triangle
+        membership counts, replayed through the engine's cached edge
+        executables (same order and dtypes as the deprecated
+        ``repro.core.listing.edge_support``)."""
+        return self._edge_plan().edge_support()
+
+    def k_truss(self, k: int, *, max_iters: Optional[int] = None):
+        """Maximal subgraph where every edge is in ≥ k − 2 triangles.
+
+        Runs the device peel loop (support recompute → filter → re-orient
+        until fixpoint or ``max_iters``, default the session's
+        ``max_peel_iters``); the surviving edge set is bit-identical to the
+        deprecated host path ``repro.core.listing.k_truss``. Returns a
+        ``Graph``.
+        """
+        return self._edge_plan().k_truss(k, max_iters=max_iters)
+
+    def truss_decomposition(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(src, dst, trussness) with src < dst: for every edge, the largest
+        k such that it survives the k-truss (2 for edges in no triangle).
+        Raises ValueError if ``max_peel_iters`` truncates any level's peel
+        before its fixpoint (trussness is only defined at the fixpoint)."""
+        return self._edge_plan().truss_decomposition()
 
     def clustering_coefficients(self) -> np.ndarray:
         """cc[v] = 2·t(v) / (d(v)·(d(v)−1)); 0 where degree < 2."""

@@ -50,6 +50,13 @@ keeps the numpy parity path. On top of the static shapes, ``GraphBatch``
 stacks same-policy graphs and counts the whole batch in ONE vmapped device
 dispatch (the ``TriangleCounter.count_many`` fast path).
 
+Since PR 5 the engine also owns the *edge lane* (``algorithm="edge"``,
+``plan_edge_support`` → ``TrussPlan``): cached per-edge support executables
+mirroring the "vertex" analysis executables, plus the device k-truss peel
+loop (support recompute → filter → re-orient through the same device prep
+machinery) — the last host-enumeration hot path (``listing.py``'s
+``edge_support``/``k_truss``) made device-resident.
+
 The historical prep helpers (``prepare_intersection_buckets``,
 ``build_tile_schedule``, ``choose_block``, ``peel_to_two_core``) are thin
 wrappers over ``repro.core.prep``, re-exported by the per-algorithm modules
@@ -73,19 +80,29 @@ from repro.graphs.formats import (
     bucket_edges_by_degree,
     csr_to_padded_neighbors,
     degree_order_permutation,
+    edges_to_csr,
     induced_subgraph,
     orient_forward,
     to_block_sparse,
 )
-from repro.graphs.device import DEFAULT_SHAPE_POLICY, DeviceGraph, ShapePolicy
+from repro.graphs.device import (
+    DEFAULT_SHAPE_POLICY,
+    DeviceCSR,
+    DeviceGraph,
+    ShapePolicy,
+)
 from repro.core import prep
 # _two_core_peel: back-compat re-export (it lived here before PR 4)
 from repro.core.prep import DeviceBucket, _two_core_peel  # noqa: F401
 from repro.core.options import DEFAULT_WIDTHS, resolve_interpret
+from repro.core.registry import register_algorithm
 from repro.kernels.intersect.ops import (
     STRATEGIES,
     choose_strategy,
     intersect_counts,
+    intersect_matches,
+    intersect_matches_both,
+    resolve_mask_strategy,
     resolve_strategy,
 )
 from repro.kernels.masked_spgemm.ops import masked_spgemm_counts
@@ -93,7 +110,9 @@ from repro.kernels.masked_spgemm.ops import masked_spgemm_counts
 __all__ = [
     "GraphBatch",
     "TrianglePlan",
+    "TrussPlan",
     "plan_triangle_count",
+    "plan_edge_support",
     "prepare_intersection_buckets",
     "build_tile_schedule",
     "choose_block",
@@ -179,20 +198,16 @@ def _build_matrix_executable(backend: str, interpret: bool) -> Callable:
 def _build_vertex_executable(n: int) -> Callable:
     """Per-vertex triangle counts for one filtered-intersection bucket.
 
-    A probe-style (searchsorted) membership test marks which u-list entries
-    appear in both forward neighbor lists; each match (e, w) is one triangle
-    (src[e], dst[e], w), so three segment_sums attribute it to its three
-    vertices. Padding never matches (disjoint u/v sentinels), so the clip on
-    the scatter ids is safe.
+    ``intersect_matches`` (the mask form of the set-intersection core) marks
+    which u-list entries appear in both forward neighbor lists; each match
+    (e, w) is one triangle (src[e], dst[e], w), so three segment_sums
+    attribute it to its three vertices. Padding never matches (disjoint u/v
+    sentinels), so the clip on the scatter ids is safe.
     """
 
     @jax.jit
     def run(u_lists, v_lists, src, dst):
-        def one(u, v):
-            pos = jnp.clip(jnp.searchsorted(v, u), 0, v.shape[0] - 1)
-            return v[pos] == u
-
-        matched = jax.vmap(one)(u_lists, v_lists)  # (E, W) bool
+        matched = intersect_matches(u_lists, v_lists)  # (E, W) bool
         per_edge = matched.sum(axis=1, dtype=jnp.int32)
         t = jax.ops.segment_sum(per_edge, src, num_segments=n)
         t = t + jax.ops.segment_sum(per_edge, dst, num_segments=n)
@@ -201,6 +216,72 @@ def _build_vertex_executable(n: int) -> Callable:
             matched.reshape(-1).astype(jnp.int32), w_ids, num_segments=n
         )
         return t
+
+    return run
+
+
+def _build_edge_executable(strategy: str, bitmap_bits: Optional[int],
+                           shape_key: tuple) -> Callable:
+    """Per-edge support contributions for one filtered-intersection bucket.
+
+    The edge analogue of the vertex executable: every match (e, j) is one
+    triangle (src, dst, w = u_lists[e, j]) whose three undirected edges are
+    (src, dst), (src, w) and (dst, w). Support is accumulated in *forward
+    CSR slot* order — each undirected edge owns exactly one oriented slot —
+    which turns the heavy side-edge scatters into dense per-row adds:
+
+    * (src, dst): slot = row_ptr[src] + (dst's position in the u row); one
+      E-sized scatter of the per-edge intersection sizes.
+    * (src, w):   w sits at u-row position j, so its slot is
+      row_ptr[src] + j. Group the u-side match mask by src
+      (one row-wise segment_sum to (n, W)) and add whole rows at
+      row_ptr[src] + arange(W) — no per-element binary search.
+    * (dst, w):   symmetric via the v-side match mask (``matched_v`` from
+      ``intersect_matches_both``) grouped by dst.
+
+    The caller converts slot order to sorted-key (= ``edge_list_unique``)
+    order with the permutation from ``prep.forward_edge_keys_*`` — once per
+    round, not per bucket.
+
+    ``strategy``/``bitmap_bits`` are the resolved match-mask core — the
+    mask-specific ``resolve_mask_strategy`` cost model (bitmap out to ~4·W
+    packed bits, since the probe mask pays two searchsorted passes), so
+    dense-id buckets get the TRUST bitmap core (pack + gather-test, the big
+    win on clique-like graphs), wide ones probe, narrow ones broadcast.
+    ``shape_key`` is ``(e_pad, width, mk, n1, *peel_knobs)`` — mk the padded
+    slot-array length, n1 = n + 1. The trailing peel knobs
+    (``max_peel_iters``, ``peel_early_exit``) do not change the traced
+    computation; they are folded into the key so ``CountOptions`` equality
+    exactly tracks edge-executable sharing (see ``get_executable``).
+
+    Padding is inert everywhere: padded bucket rows (u = -1 / v = -2) and
+    in-row sentinels (n / n+1) never match, so their scatter values are
+    zero; positions past a row's true degree carry zeros, and out-of-range
+    slots are dropped (``mode="drop"``).
+    """
+    _, width, mk, n1 = (int(x) for x in shape_key[:4])
+    n = n1 - 1
+
+    @jax.jit
+    def run(u_lists, v_lists, src, dst, row_ptr):
+        matched_u, matched_v = intersect_matches_both(
+            u_lists, v_lists, strategy=strategy, bitmap_bits=bitmap_bits)
+        per_edge = matched_u.sum(axis=1, dtype=jnp.int32)
+        # (src, dst): dst's position in the sorted u row
+        base_j = jax.vmap(
+            lambda u, d: jnp.clip(jnp.searchsorted(u, d), 0, width - 1)
+        )(u_lists, dst)
+        supp = jnp.zeros(mk, jnp.int32).at[row_ptr[src] + base_j].add(
+            per_edge, mode="drop")
+        # (src, w) / (dst, w): row-grouped masks, added as whole rows
+        by_src = jax.ops.segment_sum(matched_u.astype(jnp.int32), src,
+                                     num_segments=max(n, 1))
+        by_dst = jax.ops.segment_sum(matched_v.astype(jnp.int32), dst,
+                                     num_segments=max(n, 1))
+        rowpos = (row_ptr[:n, None]
+                  + jnp.arange(width, dtype=jnp.int32)[None, :]).reshape(-1)
+        return supp.at[rowpos].add((by_src + by_dst).reshape(-1),
+                                   mode="drop")
 
     return run
 
@@ -215,14 +296,21 @@ def get_executable(algorithm: str, backend: str, interpret: bool,
       algorithm: "intersection" | "subgraph" (both use the intersection
         executables) | "matrix" | "vertex" (per-vertex triangle counts for
         one filtered bucket — the analysis path ``TriangleCounter`` routes
-        through the plan).
+        through the plan) | "edge" (per-edge support contributions for one
+        filtered bucket — the ``TrussPlan`` lane).
       backend: "jnp" | "pallas" | "ref" (see ``repro.kernels.*.ops``).
       interpret: pallas interpret mode flag (part of the key: interpret and
         compiled kernels are distinct executables).
       shape_key: the work unit's static array shape, e.g. one degree bucket's
-        (E, W), a tile schedule's (T, B, B), or a vertex stage's (E, W, n).
+        (E, W), a tile schedule's (T, B, B), a vertex stage's (E, W, n), or
+        an edge stage's (E, W, mk, n1, max_peel_iters, peel_early_exit) —
+        the edge lane folds the plan's peel knobs into its key so equal
+        ``CountOptions`` (peel knobs included) share one cached edge
+        executable and unequal knobs miss.
       strategy: resolved set-intersection strategy ("broadcast" | "probe" |
-        "bitmap") for the intersection lanes; None for matrix/vertex.
+        "bitmap") for the intersection lanes, or the resolved match-mask
+        strategy (same three names, via ``resolve_mask_strategy``) for the
+        edge lane; None for matrix/vertex.
       bitmap_bits: static packed-bitmap capacity when strategy="bitmap",
         else None.
 
@@ -252,6 +340,11 @@ def get_executable(algorithm: str, backend: str, interpret: bool,
         fn = _build_matrix_executable(backend, interpret)
     elif algorithm == "vertex":
         fn = _build_vertex_executable(int(shape_key[-1]))
+    elif algorithm == "edge":
+        if strategy not in STRATEGIES:
+            raise ValueError(f"unresolved strategy {strategy!r}; "
+                             f"expected one of {STRATEGIES}")
+        fn = _build_edge_executable(strategy, bitmap_bits, tuple(shape_key))
     else:
         raise ValueError(f"unknown algorithm {algorithm!r}")
     _EXECUTABLE_CACHE[key] = fn
@@ -675,6 +768,373 @@ def plan_triangle_count(
         meta=meta,
         prep_seconds=prep_seconds,
     )
+
+
+# ---------------------------------------------------------------------------
+# TrussPlan — the edge lane: per-edge support + the device k-truss peel
+# ---------------------------------------------------------------------------
+
+def _decode_edge_keys(keys: np.ndarray, n1: int):
+    """Packed ``lo * n1 + hi`` keys → ((lo, hi) int32 arrays), the single
+    place the key encoding is inverted (host side)."""
+    keys = np.asarray(keys, dtype=np.int64)
+    return (keys // n1).astype(np.int32), (keys % n1).astype(np.int32)
+
+
+@dataclasses.dataclass
+class _EdgeStage:
+    executable: Callable
+    args: Tuple[jnp.ndarray, ...]  # (u_lists, v_lists, src, dst, row_ptr)
+    shape_key: tuple
+    strategy: str  # resolved match-mask strategy (broadcast | probe | bitmap)
+
+
+def _edge_stages(g, *, widths: Sequence[int], strategy: str,
+                 bitmap_bits: Optional[int], prep_backend: str,
+                 policy: ShapePolicy, peel_key: tuple):
+    """Build one graph's edge-support stages: prep the filtered buckets (on
+    the requested backend), materialize the slot→key addressing structure
+    (sorted keys + permutation + forward row_ptr), and bind each bucket to
+    its cached edge executable.
+
+    Returns (stages, edge_keys, perm, m_edges, meta) — ``edge_keys`` is the
+    (mk,) sorted device array whose leading ``m_edges`` slots are the real
+    edges and ``perm`` reorders slot-indexed support into key order; the
+    k-truss peel calls this once per round on the re-oriented survivor
+    graph.
+    """
+    n = g.n
+    prep.check_edge_key_range(n)
+    buckets = _buckets_for_plan(g, "filtered", widths, prep_backend, policy)
+    if prep_backend == "device":
+        keys, perm, row_ptr, m_edges = prep.forward_edge_keys_device(
+            g, policy=policy)
+    else:
+        keys_h, perm_h, row_ptr_h, m_edges = prep.forward_edge_keys_host(g)
+        keys = jnp.asarray(keys_h, dtype=jnp.int32)
+        perm = jnp.asarray(perm_h, dtype=jnp.int32)
+        row_ptr = jnp.asarray(row_ptr_h, dtype=jnp.int32)
+    mk, n1 = int(keys.shape[0]), n + 1
+    id_range = n + 2  # real ids + the in-row sentinels n (u) and n+1 (v)
+    stages = []
+    for b in buckets:
+        # mask-specific cost model: the probe mask pays two searchsorted
+        # passes, so bitmap wins out to ~4·W packed bits (resolve_mask_
+        # strategy), not just the counting lane's id_range ≤ packed_bits(W)
+        strat, bits = resolve_mask_strategy(b.width, id_range, strategy)
+        if bitmap_bits is not None and strat == "bitmap":
+            if bitmap_bits < id_range:
+                raise ValueError(
+                    f"bitmap_bits={bitmap_bits} cannot represent id range "
+                    f"{id_range} (n + 2 sentinel ids); ids past the "
+                    f"capacity would silently never match"
+                )
+            bits = int(bitmap_bits)
+        shape_key = b.shape + (mk, n1) + tuple(peel_key)
+        fn = get_executable("edge", "jnp", False, shape_key, strategy=strat,
+                            bitmap_bits=bits)
+        stages.append(_EdgeStage(
+            executable=fn,
+            args=(b.u_lists, b.v_lists, b.src, b.dst, row_ptr),
+            shape_key=shape_key,
+            strategy=strat,
+        ))
+    meta = dict(
+        bucket_shapes=[s.shape_key[:2] for s in stages],
+        bucket_strategies=[(s.shape_key[1], s.strategy) for s in stages],
+        bucket_edges=[b.edges for b in buckets],
+    )
+    return stages, keys, perm, m_edges, meta
+
+
+@dataclasses.dataclass
+class TrussPlan:
+    """A prepared edge-analytics session: device buffers + cached edge
+    executables for per-edge support, plus the device k-truss peel loop.
+
+    Mirrors ``TrianglePlan`` for the edge lane (registered as
+    ``algorithm="edge"``): construction runs the prep stage once —
+    orientation, bucketing, padded gathers, and the sorted undirected-edge
+    key array — and ``support()`` / ``edge_support()`` / ``count()`` are
+    device replays of the cached stages. ``k_truss(k)`` iterates the peel
+    (support recompute → filter → re-orient through
+    ``DeviceCSR.from_edges`` and the device prep pipeline) until fixpoint
+    or ``max_peel_iters``; every round's stages come from the same
+    process-wide executable cache, so rounds whose policy-rounded shapes
+    collide compile nothing new. The host enumeration in
+    ``repro.core.listing`` is never called (tests poison it).
+    """
+
+    graph: Graph
+    stages: List[_EdgeStage]
+    edge_keys: jnp.ndarray  # (mk,) sorted int32; padding = int32 max
+    perm: jnp.ndarray  # (mk,) slot→key-order permutation
+    m_edges: int
+    widths: Tuple[int, ...]
+    strategy: str
+    bitmap_bits: Optional[int]
+    prep_backend: str
+    policy: ShapePolicy
+    max_peel_iters: int
+    peel_early_exit: bool
+    meta: Dict[str, Any]
+    prep_seconds: float
+    executions: int = 0
+
+    algorithm: str = "edge"
+
+    @staticmethod
+    def _run_stages(stages: List[_EdgeStage], keys: jnp.ndarray,
+                    perm: jnp.ndarray) -> jnp.ndarray:
+        """Sum the per-bucket slot-ordered supports, then reorder into
+        sorted-key order (one gather per round, aligned with ``keys``)."""
+        total = jnp.zeros(keys.shape[0], jnp.int32)
+        for st in stages:
+            total = total + st.executable(*st.args)
+        return total[perm]
+
+    def support(self) -> np.ndarray:
+        """(m,) int64 per-edge triangle-membership counts, in
+        ``edge_list_unique`` (lex (lo, hi)) order; pure device replay."""
+        total = self._run_stages(self.stages, self.edge_keys, self.perm)
+        self.executions += 1
+        return np.asarray(total, dtype=np.int64)[: self.m_edges]
+
+    def edge_support(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(src, dst, support) with src < dst — the device replacement for
+        ``repro.core.listing.edge_support`` (same order, same dtypes)."""
+        keys = np.asarray(self.edge_keys)[: self.m_edges]
+        su, sv = _decode_edge_keys(keys, self.graph.n + 1)
+        return su, sv, self.support()
+
+    def count(self) -> int:
+        """Exact triangle count: every triangle contributes 1 to each of
+        its three edges, so Σ support = 3Δ."""
+        total = int(self.support().sum())
+        assert total % 3 == 0, total
+        return total // 3
+
+    def count_with_stats(self) -> Tuple[int, dict]:
+        return self.count(), dict(self.meta)
+
+    def _peel(self, start: Optional[Graph], k: int,
+              max_iters: int) -> Tuple[np.ndarray, int, bool]:
+        """Bulk k-truss peel to fixpoint (or ``max_iters`` rounds).
+
+        ``start=None`` peels the plan's own graph, reusing the cached
+        first-round stages. Returns (surviving packed keys as int64 numpy,
+        rounds run, converged) — identical semantics to the host oracle:
+        every round removes ALL edges with support < k − 2 simultaneously.
+        """
+        thresh = int(k) - 2
+        peel_key = (self.max_peel_iters, self.peel_early_exit)
+        kw = dict(widths=self.widths, strategy=self.strategy,
+                  bitmap_bits=self.bitmap_bits,
+                  prep_backend=self.prep_backend, policy=self.policy,
+                  peel_key=peel_key)
+        if start is None:
+            stages, keys, perm, m_cur = (self.stages, self.edge_keys,
+                                         self.perm, self.m_edges)
+        else:
+            stages, keys, perm, m_cur, _ = _edge_stages(start, **kw)
+        n, n1 = self.graph.n, self.graph.n + 1
+        rounds, converged = 0, (m_cur == 0)
+        while rounds < max_iters and m_cur > 0:
+            supp = self._run_stages(stages, keys, perm)
+            keep = supp[:m_cur] >= thresh
+            kept = int(jnp.sum(keep))  # one scalar sync per round
+            rounds += 1
+            if kept == m_cur:
+                converged = True
+                if self.peel_early_exit:
+                    break
+                continue  # fixpoint is stable; remaining rounds are no-ops
+            if kept == 0:
+                # the empty edge set is trivially stable: a fixpoint too
+                m_cur, converged = 0, True
+                break
+            if self.prep_backend == "device":
+                # re-orient on device: survivors symmetrized through the
+                # jitted sort-based CSR build, then re-prepped
+                lo, hi = keys[:m_cur] // n1, keys[:m_cur] % n1
+                csr = DeviceCSR.from_edges(
+                    jnp.concatenate([lo, hi]), jnp.concatenate([hi, lo]),
+                    n, valid=jnp.concatenate([keep, keep]),
+                    policy=self.policy,
+                )
+                cur = DeviceGraph(csr, policy=self.policy,
+                                  name=self.graph.name + "+peel")
+            else:
+                keys_h = np.asarray(keys)[:m_cur][np.asarray(keep)]
+                su, sv = _decode_edge_keys(keys_h, n1)
+                cur = edges_to_csr(su, sv, n=n,
+                                   name=self.graph.name + "+peel")
+            stages, keys, perm, m_cur, _ = _edge_stages(cur, **kw)
+        self.executions += rounds
+        return np.asarray(keys, dtype=np.int64)[:m_cur], rounds, converged
+
+    def k_truss(self, k: int, *, max_iters: Optional[int] = None) -> Graph:
+        """Maximal subgraph where every edge is in ≥ k − 2 triangles.
+
+        The device peel loop: support recompute → filter → re-orient per
+        round, stopping at the fixpoint (``peel_early_exit``) or after
+        ``max_iters`` rounds (default: the plan's ``max_peel_iters``). The
+        surviving edge set is bit-identical to the
+        ``repro.core.listing.k_truss`` host oracle. ``meta["peel_rounds"]``
+        / ``meta["peel_converged"]`` record the last peel.
+        """
+        max_iters = self.max_peel_iters if max_iters is None else int(max_iters)
+        keys, rounds, converged = self._peel(None, k, max_iters)
+        self.meta["peel_rounds"] = rounds
+        self.meta["peel_converged"] = converged
+        su, sv = _decode_edge_keys(keys, self.graph.n + 1)
+        return edges_to_csr(su, sv, n=self.graph.n,
+                            name=self.graph.name + f"+truss{k}")
+
+    def truss_decomposition(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-edge trussness: the largest k such that the edge survives the
+        k-truss. Returns (src, dst, trussness) with src < dst, in
+        ``edge_list_unique`` order (edges in no triangle have trussness 2).
+
+        Peels level by level — each k-truss starts from the previous level's
+        survivors (the (k)-truss of the (k−1)-truss IS the (k)-truss of the
+        graph), so the edges removed between levels are exactly the
+        trussness-(k−1) class. Trussness is only defined at the peel's
+        fixpoint, so every level must converge within ``max_peel_iters``;
+        a bound chosen for truncated ``k_truss`` benchmarking raises here
+        instead of silently inflating labels.
+
+        Raises:
+          ValueError: a level's peel hit ``max_peel_iters`` before its
+            fixpoint.
+        """
+        n1 = self.graph.n + 1
+        orig = np.asarray(self.edge_keys, dtype=np.int64)[: self.m_edges]
+        truss = np.full(orig.shape[0], 2, dtype=np.int64)
+        cur_keys, cur_graph, k = orig, None, 3
+        while cur_keys.size:
+            nxt_keys, _, converged = self._peel(cur_graph, k,
+                                                self.max_peel_iters)
+            if not converged:
+                raise ValueError(
+                    f"truss_decomposition needs every peel level to reach "
+                    f"its fixpoint, but the {k}-truss peel was truncated at "
+                    f"max_peel_iters={self.max_peel_iters}; raise the "
+                    f"max_peel_iters option"
+                )
+            removed = cur_keys[~np.isin(cur_keys, nxt_keys)]
+            truss[np.searchsorted(orig, removed)] = k - 1
+            su, sv = _decode_edge_keys(nxt_keys, n1)
+            cur_graph = edges_to_csr(su, sv, n=self.graph.n,
+                                     name=self.graph.name + f"+truss{k}")
+            cur_keys, k = nxt_keys, k + 1
+        su, sv = _decode_edge_keys(orig, n1)
+        return su, sv, truss
+
+    def block_until_ready(self) -> "TrussPlan":
+        for st in self.stages:
+            for a in st.args:
+                a.block_until_ready()
+        self.edge_keys.block_until_ready()
+        return self
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def shape_keys(self) -> List[tuple]:
+        return [st.shape_key for st in self.stages]
+
+
+def plan_edge_support(
+    g: Graph,
+    *,
+    widths: Sequence[int] = DEFAULT_WIDTHS,
+    strategy: str = "auto",
+    bitmap_bits: Optional[int] = None,
+    prep_backend: str = "device",
+    shape_policy: Optional[ShapePolicy] = None,
+    max_peel_iters: int = 1000,
+    peel_early_exit: bool = True,
+) -> TrussPlan:
+    """Run the edge lane's prep once and return a replayable ``TrussPlan``.
+
+    Args:
+      g: the input ``Graph`` (undirected simple CSR; the packed edge keys
+        need ``(n + 1)² ≤ int32 max``, i.e. n ≲ 46k — larger graphs raise).
+      widths: degree-class bucket widths (as the intersection lane).
+      strategy: per-bucket match-mask core — the mask-specific
+        ``resolve_mask_strategy`` cost model: "auto" (bitmap while the id
+        range stays within ~4·W packed bits — the probe mask pays two
+        searchsorted passes — then probe for W ≥ 64, broadcast below) or a
+        forced "broadcast" | "probe" | "bitmap".
+      bitmap_bits: optional forced packed capacity for bitmap buckets
+        (must cover the id range ``n + 2``).
+      prep_backend: "device" (default; jitted prep + device peel) or "host"
+        (numpy parity prep; the support executables still run on device).
+      shape_policy: extent-rounding policy (None ⇒ ``DEFAULT_SHAPE_POLICY``).
+      max_peel_iters: k-truss peel round bound (the peel normally stops at
+        its fixpoint much earlier).
+      peel_early_exit: stop the peel at the fixpoint (default) or run
+        exactly ``max_peel_iters`` rounds (identical result; benchmarking
+        mode). Both knobs are folded into the edge executables' cache key.
+
+    Returns:
+      A ``TrussPlan`` exposing ``edge_support()`` / ``k_truss(k)`` /
+      ``truss_decomposition()`` / ``count()``. The facade surfaces these as
+      ``TriangleCounter.edge_support()`` etc.; ``CountOptions`` maps onto
+      the keyword arguments via ``plan_kwargs("edge")``.
+    """
+    policy = shape_policy if shape_policy is not None else DEFAULT_SHAPE_POLICY
+    max_peel_iters = int(max_peel_iters)
+    peel_early_exit = bool(peel_early_exit)
+    if max_peel_iters < 1:
+        raise ValueError(f"max_peel_iters must be ≥ 1, got {max_peel_iters}")
+    t0 = time.perf_counter()
+    stages, keys, perm, m_edges, bucket_meta = _edge_stages(
+        g, widths=tuple(widths), strategy=strategy, bitmap_bits=bitmap_bits,
+        prep_backend=prep_backend, policy=policy,
+        peel_key=(max_peel_iters, peel_early_exit),
+    )
+    meta = dict(
+        graph=g.name,
+        n=g.n,
+        m=g.m_undirected,
+        edges=m_edges,
+        widths=tuple(widths),
+        strategy=strategy,
+        prep_backend=prep_backend,
+        shape_policy=policy.key() if prep_backend == "device" else None,
+        max_peel_iters=max_peel_iters,
+        peel_early_exit=peel_early_exit,
+        **bucket_meta,
+    )
+    prep_seconds = time.perf_counter() - t0
+    return TrussPlan(
+        graph=g,
+        stages=stages,
+        edge_keys=keys,
+        perm=perm,
+        m_edges=m_edges,
+        widths=tuple(widths),
+        strategy=strategy,
+        bitmap_bits=bitmap_bits,
+        prep_backend=prep_backend,
+        policy=policy,
+        max_peel_iters=max_peel_iters,
+        peel_early_exit=peel_early_exit,
+        meta=meta,
+        prep_seconds=prep_seconds,
+    )
+
+
+def _edge_planner(g: Graph, options, *, mesh=None) -> TrussPlan:
+    """Registry planner: CountOptions → edge-lane TrussPlan."""
+    return plan_edge_support(g, **options.plan_kwargs("edge"))
+
+
+register_algorithm("edge", _edge_planner)
 
 
 # ---------------------------------------------------------------------------

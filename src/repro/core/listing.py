@@ -7,12 +7,17 @@ machinery: the (E, W_u, W_v) match tensor that the counting kernels reduce is
 instead materialized per bucket and scattered into triple lists / per-vertex
 and per-edge accumulators.
 
-These are host-side *enumeration* paths (they materialize triangle lists —
-needed by ``k_truss``/``edge_support``). For per-vertex analysis that only
-needs counts, prefer the facade: ``TriangleCounter.triangles_per_vertex()``
-(and ``clustering_coefficients`` / ``transitivity`` there) replays the
-session plan's cached device buffers through the engine's executable cache
-instead of re-running this module's numpy enumeration.
+These are host-side *enumeration* paths (they materialize triangle lists).
+Every downstream application now has a device-resident facade route that
+replays cached engine buffers instead of re-running this module's numpy
+enumeration: per-vertex analysis (``TriangleCounter.triangles_per_vertex`` /
+``clustering_coefficients`` / ``transitivity``) and, since the edge lane,
+per-edge analytics too (``TriangleCounter.edge_support`` / ``k_truss`` /
+``truss_decomposition``, backed by ``repro.core.engine.TrussPlan``).
+``edge_support`` and ``k_truss`` here are therefore DeprecationWarning shims
+around the retained numpy implementations — which stay, verbatim, as the
+parity oracle the differential tests (``tests/test_truss.py``) compare the
+device peel against.
 """
 
 from __future__ import annotations
@@ -92,7 +97,21 @@ def transitivity(g: Graph) -> float:
 
 
 def edge_support(g: Graph) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Per-undirected-edge triangle membership count.
+    """Deprecated shim: per-undirected-edge triangle membership count.
+
+    Use ``TriangleCounter(g).edge_support()`` — same (src, dst, support)
+    triple with src < dst, replayed through the engine's cached edge
+    executables instead of this host enumeration. The numpy implementation
+    is retained as ``_edge_support_host``, the differential-test oracle.
+    """
+    from repro.core.api import warn_deprecated
+
+    warn_deprecated("edge_support(g)", "TriangleCounter(g).edge_support()")
+    return _edge_support_host(g)
+
+
+def _edge_support_host(g: Graph) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-undirected-edge triangle membership count (numpy parity oracle).
 
     Returns (src, dst, support) with src < dst.
     """
@@ -113,16 +132,29 @@ def edge_support(g: Graph) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
 
 
 def k_truss(g: Graph, k: int, max_iters: int = 1000) -> Graph:
-    """Maximal subgraph where every edge is in ≥ k−2 triangles.
+    """Deprecated shim: maximal subgraph where every edge is in ≥ k−2
+    triangles.
 
-    Iterative edge peel re-using triangle enumeration each round — the
-    paper's motivating TC application (§1: 'enumerating triangles is useful
-    as a subroutine in solving k-truss')."""
+    Use ``TriangleCounter(g).k_truss(k)`` — the device peel loop produces a
+    bit-identical surviving edge set. The numpy peel is retained as
+    ``_k_truss_host``, the differential-test oracle.
+    """
+    from repro.core.api import warn_deprecated
+
+    warn_deprecated("k_truss(g, k)", "TriangleCounter(g).k_truss(k)")
+    return _k_truss_host(g, k, max_iters=max_iters)
+
+
+def _k_truss_host(g: Graph, k: int, max_iters: int = 1000) -> Graph:
+    """Iterative numpy edge peel re-using triangle enumeration each round —
+    the paper's motivating TC application (§1: 'enumerating triangles is
+    useful as a subroutine in solving k-truss') and the parity oracle for
+    the engine's device peel."""
     cur = g
     for _ in range(max_iters):
         if cur.m_undirected == 0:
             return cur
-        su, sv, supp = edge_support(cur)
+        su, sv, supp = _edge_support_host(cur)
         keep = supp >= (k - 2)
         if keep.all():
             return cur

@@ -68,8 +68,8 @@ class CountOptions:
     Attributes:
       algorithm: "auto" (cross-lane cost model, see
         ``repro.core.registry.choose_algorithm``) or a registered lane name —
-        "intersection" | "matrix" | "subgraph" | "intersection_distributed" |
-        "matrix_distributed".
+        "intersection" | "matrix" | "subgraph" | "edge" (per-edge support /
+        k-truss) | "intersection_distributed" | "matrix_distributed".
       variant: intersection lane — "filtered" (forward algorithm, each
         triangle once) or "full" (every directed edge, found 6×).
       backend: "jnp" | "pallas" | "ref" per-kernel execution path.
@@ -85,10 +85,20 @@ class CountOptions:
       bitmap_bits: optional forced packed-bitmap capacity (multiple of 32)
         for bitmap-strategy buckets; None (default) sizes it from the
         bucket's id range via ``resolve_strategy``.
-      prep_backend: where the intersection/subgraph plan stage runs —
+      prep_backend: where the intersection/subgraph/edge plan stage runs —
         "device" (default: the jitted prep in ``repro.core.prep`` /
         ``repro.graphs.device``) or "host" (the numpy parity path). The
         matrix lane's tile schedule is host-side either way.
+      max_peel_iters: edge lane — upper bound on k-truss peel rounds
+        (support recompute → filter → re-orient); the peel normally stops
+        at the fixpoint long before. Folded into the edge executables'
+        cache key, so equal options share cached edge executables and
+        unequal peel knobs miss.
+      peel_early_exit: edge lane — stop the peel as soon as a round removes
+        no edge (the default). False runs exactly ``max_peel_iters`` rounds
+        (the fixpoint is stable under further rounds, so the result is
+        identical) — a steady-state benchmarking mode. Also part of the
+        edge executables' cache key.
       shape_policy: the ``ShapePolicy`` rounding data-dependent prep extents
         into static shape classes; None (default) means
         ``DEFAULT_SHAPE_POLICY`` (pow2 rounding). Part of the cache key:
@@ -113,6 +123,8 @@ class CountOptions:
     bitmap_bits: Optional[int] = None
     prep_backend: str = "device"
     shape_policy: Optional[ShapePolicy] = None
+    max_peel_iters: int = 1000
+    peel_early_exit: bool = True
 
     def __post_init__(self):
         # normalize widths to a tuple of ints so the dataclass stays hashable
@@ -182,6 +194,17 @@ class CountOptions:
                 f"shape_policy must be None or a ShapePolicy, "
                 f"got {self.shape_policy!r}"
             )
+        if not isinstance(self.max_peel_iters, int) \
+                or isinstance(self.max_peel_iters, bool) \
+                or self.max_peel_iters < 1:
+            raise ValueError(
+                f"max_peel_iters must be a positive int, "
+                f"got {self.max_peel_iters!r}"
+            )
+        if not isinstance(self.peel_early_exit, bool):
+            raise ValueError(
+                f"peel_early_exit must be a bool, got {self.peel_early_exit!r}"
+            )
 
     @property
     def resolved_interpret(self) -> bool:
@@ -204,6 +227,7 @@ class CountOptions:
             self.resolved_interpret, self.strategy, self.widths,
             self.block, self.permute, self.bitmap_bits,
             self.prep_backend, self.resolved_shape_policy.key(),
+            self.max_peel_iters, self.peel_early_exit,
         )
 
     def replace(self, **changes) -> "CountOptions":
@@ -232,4 +256,11 @@ class CountOptions:
         if lane == "matrix":
             return dict(backend=self.backend, interpret=self.interpret,
                         block=self.block, permute=self.permute)
+        if lane == "edge":
+            return dict(widths=self.widths, strategy=self.strategy,
+                        bitmap_bits=self.bitmap_bits,
+                        prep_backend=self.prep_backend,
+                        shape_policy=self.shape_policy,
+                        max_peel_iters=self.max_peel_iters,
+                        peel_early_exit=self.peel_early_exit)
         raise ValueError(f"unknown engine lane {lane!r}")

@@ -62,14 +62,19 @@ from repro.graphs.device import (
     _bucket_sort_dev,
     _gather_bucket_dev,
     _induced_compact_dev,
+    _sorted_edge_keys_dev,
     _two_core_peel_dev,
+    fits_int32_pair_keys,
 )
 from repro.core.options import DEFAULT_WIDTHS
 
 __all__ = [
     "DeviceBucket",
     "build_tile_schedule",
+    "check_edge_key_range",
     "choose_block",
+    "forward_edge_keys_device",
+    "forward_edge_keys_host",
     "induced_device_graph",
     "peel_to_two_core",
     "peel_to_two_core_device",
@@ -181,6 +186,86 @@ def prepare_intersection_buckets_device(
         out.append(DeviceBucket(width=w, edges=c, u_lists=u, v_lists=v,
                                 src=sb, dst=db))
     return out
+
+
+def check_edge_key_range(n: int) -> None:
+    """Guard the edge lane's packed (lo, hi) keys against int32 overflow.
+
+    The edge-support executables address undirected edges through sorted
+    ``lo * (n + 1) + hi`` keys — the same ``fits_int32_pair_keys`` bound as
+    ``DeviceCSR.from_edges``, which the k-truss peel uses to rebuild the
+    graph each round.
+
+    Raises:
+      ValueError: when ``(n + 1)²`` exceeds the int32 range (n > ~46k).
+    """
+    if not fits_int32_pair_keys(n):
+        raise ValueError(
+            f"the edge-support lane packs undirected edges into int32 "
+            f"(lo, hi) keys, which needs (n+1)^2 ≤ int32 max; n={n} is too "
+            f"large (use repro.core.listing's host enumeration path instead)"
+        )
+
+
+def forward_edge_keys_device(
+    g: Union[Graph, DeviceGraph],
+    *,
+    policy: Optional[ShapePolicy] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, int]:
+    """The edge lane's undirected-edge addressing structure, on device.
+
+    The forward orientation keeps exactly one directed copy of every
+    undirected edge, so a forward CSR *slot* IS an undirected edge id. The
+    engine's edge executables accumulate support in slot order (which makes
+    the side-edge scatters dense per-row adds); this function supplies the
+    conversion to the canonical order: each slot's packed
+    ``min·(n+1)+max`` key, sorted (= ``edge_list_unique``'s (lo, hi) lex
+    order), plus the sort permutation mapping sorted positions back to
+    slots. Padding slots carry the int32 max sentinel and sort to the end.
+
+    Args:
+      g: a host ``Graph`` (uploaded once) or an existing ``DeviceGraph``.
+      policy: extent-rounding policy (ignored when ``g`` is a
+        ``DeviceGraph``, which carries its own).
+
+    Returns:
+      (keys, perm, row_ptr, m): the (mk_pad,) sorted int32 keys, the
+      (mk_pad,) slot permutation (``supp_slots[perm]`` is support in key
+      order), the forward (n+1,) row_ptr the executables scatter through,
+      and the true undirected edge count occupying the leading key slots.
+    """
+    dg = _as_device_graph(g, policy)
+    check_edge_key_range(dg.n)
+    if dg.m == 0:
+        mk = dg.policy.round_edges(0)
+        return (jnp.full(mk, jnp.iinfo(jnp.int32).max, jnp.int32),
+                jnp.arange(mk, dtype=jnp.int32),
+                jnp.zeros(dg.n + 1, jnp.int32), 0)
+    fwd = dg.forward()
+    keys, perm = _sorted_edge_keys_dev(fwd.src, fwd.dst, fwd.kvalid,
+                                       n1=dg.n + 1)
+    return keys, perm, fwd.row_ptr, dg.m // 2
+
+
+def forward_edge_keys_host(g: Graph) -> Tuple[np.ndarray, np.ndarray,
+                                              np.ndarray, int]:
+    """Numpy parity path of ``forward_edge_keys_device``.
+
+    Host slots are the oriented DAG's CSR positions (``orient_forward``),
+    so keys per slot need an explicit lex sort into (lo, hi) order.
+
+    Returns:
+      (keys, perm, row_ptr, m): unpadded (m,) sorted int32 keys, the (m,)
+      slot permutation, the oriented (n+1,) row_ptr, and m itself.
+    """
+    check_edge_key_range(g.n)
+    dag = orient_forward(g)
+    src, dst = dag.edge_endpoints()
+    lo = np.minimum(src, dst).astype(np.int64)
+    hi = np.maximum(src, dst).astype(np.int64)
+    key = (lo * (g.n + 1) + hi).astype(np.int32)
+    perm = np.argsort(key, kind="stable").astype(np.int32)
+    return key[perm], perm, dag.row_ptr.astype(np.int32), int(key.shape[0])
 
 
 def peel_to_two_core_device(dg: DeviceGraph) -> jnp.ndarray:

@@ -9,6 +9,11 @@ entry points. Each lane registers a *planner* here —
 ``OneShotPlan`` adapter for the distributed variants) — and the facade
 (``repro.core.api.TriangleCounter``) looks lanes up by name.
 
+Builtin lanes: the three engine counting lanes ("intersection" / "matrix" /
+"subgraph"), the edge-analytics lane ("edge" — per-edge support and the
+device k-truss peel, ``repro.core.engine.TrussPlan``), and the two
+``shard_map`` distributed variants.
+
 ``choose_algorithm(g)`` is the documented ``algorithm="auto"`` cost model,
 anchored to the paper's figures and calibrated on this repo's dataset
 registry (see the rule list on ``_default_chooser``). It is overridable:
@@ -59,6 +64,7 @@ def _ensure_builtin() -> None:
     """Import the builtin lane modules so their registrations have run
     (each registers at import; ``repro.core`` imports them all, but the
     registry must also work when imported standalone)."""
+    import repro.core.engine  # noqa: F401  (registers the "edge" lane)
     import repro.core.tc_intersection  # noqa: F401
     import repro.core.tc_matrix  # noqa: F401
     import repro.core.tc_subgraph  # noqa: F401

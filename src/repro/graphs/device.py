@@ -60,6 +60,14 @@ def next_pow2(x: int) -> int:
     return 1 if x <= 1 else 1 << (x - 1).bit_length()
 
 
+def fits_int32_pair_keys(n: int) -> bool:
+    """Whether ``(n + 1)²`` fits the int32 range — the single bound behind
+    every packed ``a * (n + 1) + b`` vertex-pair key in the repo
+    (``DeviceCSR.from_edges`` sort keys, the edge lane's undirected-edge
+    keys). x64 is off by default, so keys are 32-bit; n ≲ 46k."""
+    return (n + 1) ** 2 <= np.iinfo(np.int32).max
+
+
 @dataclasses.dataclass(frozen=True)
 class ShapePolicy:
     """How data-dependent extents are rounded into static shape classes.
@@ -244,6 +252,30 @@ def _gather_bucket_dev(sorted_src: jnp.ndarray, sorted_dst: jnp.ndarray,
     return u, v, sb, db
 
 
+@functools.partial(jax.jit, static_argnames=("n1",))
+def _sorted_edge_keys_dev(src: jnp.ndarray, dst: jnp.ndarray,
+                          valid: jnp.ndarray, *, n1: int):
+    """Sorted packed keys of a masked undirected edge list, plus the sort
+    permutation.
+
+    Each live slot's key is ``min(src, dst) * n1 + max(src, dst)`` (``n1`` =
+    n + 1, so keys of distinct edges are distinct and ascending keys are
+    ascending (lo, hi) pairs — the same order as a host
+    ``edge_list_unique``). Dead slots take the int32 max sentinel and sort
+    to the end, so the leading ``valid.sum()`` entries are the real edges.
+    Returns ``(sorted_keys, perm)`` with ``sorted_keys = keys[perm]`` —
+    ``perm`` maps sorted-key positions back to edge slots, which is how the
+    engine reorders its slot-indexed support vectors into key order. The
+    caller guards ``(n + 1)² ≤ int32 max`` (keys are 32-bit, x64 off).
+    """
+    lo = jnp.minimum(src, dst).astype(jnp.int32)
+    hi = jnp.maximum(src, dst).astype(jnp.int32)
+    key = jnp.where(valid, lo * jnp.int32(n1) + hi,
+                    jnp.int32(jnp.iinfo(jnp.int32).max))
+    perm = jnp.argsort(key)
+    return key[perm], perm
+
+
 @functools.partial(jax.jit, static_argnames=("n",))
 def _two_core_peel_dev(src: jnp.ndarray, dst: jnp.ndarray,
                        valid: jnp.ndarray, init_alive: jnp.ndarray, *, n: int):
@@ -350,7 +382,7 @@ class DeviceCSR:
           ValueError: when ``(n + 1)²`` exceeds the int32 sort-key range
             (n > ~46k; x64 is off by default, so keys are 32-bit).
         """
-        if (n + 1) ** 2 > np.iinfo(np.int32).max:
+        if not fits_int32_pair_keys(n):
             raise ValueError(
                 f"DeviceCSR.from_edges sort keys need (n+1)^2 ≤ int32 max; "
                 f"n={n} is too large (use edges_to_csr + from_graph instead)"

@@ -4,6 +4,8 @@ from repro.kernels.intersect.ops import (
     choose_strategy,
     intersect_counts,
     intersect_counts_probe,
+    intersect_matches,
+    intersect_matches_both,
     packed_bits,
     resolve_strategy,
 )
@@ -17,6 +19,7 @@ from repro.kernels.intersect.bitmap import (
     intersect_counts_bitmap,
     intersect_counts_bitmap_pallas,
     intersect_counts_bitmap_ref,
+    intersect_matches_bitmap,
 )
 
 __all__ = [
@@ -27,6 +30,9 @@ __all__ = [
     "packed_bits",
     "intersect_counts",
     "intersect_counts_probe",
+    "intersect_matches",
+    "intersect_matches_both",
+    "intersect_matches_bitmap",
     "intersect_counts_probe_pallas",
     "intersect_counts_probe_ref",
     "intersect_counts_bitmap",

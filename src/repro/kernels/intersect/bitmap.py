@@ -37,11 +37,12 @@ __all__ = [
     "intersect_counts_bitmap",
     "intersect_counts_bitmap_pallas",
     "intersect_counts_bitmap_ref",
+    "intersect_matches_bitmap",
 ]
 
 
-def _pack_and_probe(u: jnp.ndarray, v: jnp.ndarray, num_bits: int) -> jnp.ndarray:
-    """Shared jnp body: pack v rows into uint32 words, probe u. (E,) int32."""
+def _pack_rows(v: jnp.ndarray, num_bits: int) -> jnp.ndarray:
+    """Pack each sorted row of v into ``num_bits/32`` uint32 bitmap words."""
     assert num_bits % 32 == 0 and num_bits > 0, num_bits
     nwords = num_bits // 32
     # keep only the first occurrence of each value so the per-word SUM below
@@ -60,15 +61,48 @@ def _pack_and_probe(u: jnp.ndarray, v: jnp.ndarray, num_bits: int) -> jnp.ndarra
     for k in range(nwords):  # static unroll; bounds memory at (E, W) per word
         sel = jnp.where(v_word == k, contrib, jnp.uint32(0))
         words.append(sel.sum(axis=1, dtype=jnp.uint32))
-    packed = jnp.stack(words, axis=1)  # (E, nwords) uint32
+    return jnp.stack(words, axis=1)  # (E, nwords) uint32
 
+
+def _probe_bits(packed: jnp.ndarray, u: jnp.ndarray,
+                num_bits: int) -> jnp.ndarray:
+    """(E, W) bool: gather each u element's word and test its bit."""
     u_valid = (u >= 0) & (u < num_bits)
     u_word = jnp.where(u_valid, u // 32, 0)
     u_bit = jnp.where(u_valid, u % 32, 0).astype(jnp.uint32)
     hit_words = jnp.take_along_axis(packed, u_word, axis=1)  # (E, W)
     hits = jnp.right_shift(hit_words, u_bit) & jnp.uint32(1)
-    hits = hits.astype(jnp.int32) * u_valid.astype(jnp.int32)
-    return hits.sum(axis=1).astype(jnp.int32)
+    return (hits != 0) & u_valid
+
+
+def _pack_and_probe(u: jnp.ndarray, v: jnp.ndarray, num_bits: int) -> jnp.ndarray:
+    """Shared jnp body: pack v rows into uint32 words, probe u. (E,) int32."""
+    return _probe_bits(_pack_rows(v, num_bits), u, num_bits) \
+        .sum(axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_bits",))
+def intersect_matches_bitmap(
+    u_lists: jnp.ndarray, v_lists: jnp.ndarray, *, num_bits: int
+) -> jnp.ndarray:
+    """Bitmap membership MASK (jnp path): which u positions occur in v.
+
+    The mask form of ``intersect_counts_bitmap`` — same packing, but the
+    per-position hits are returned instead of row-summed, for the engine's
+    vertex/edge analysis executables (which scatter each match to its
+    triangle's vertices/edges).
+
+    Args:
+      u_lists: (E, W) int32 sorted rows (see module contract).
+      v_lists: (E, W) int32 sorted rows, disjoint padding sentinel.
+      num_bits: static packed-bitmap capacity, a positive multiple of 32.
+        Values outside [0, num_bits) on either side never match.
+
+    Returns:
+      (E, W) bool — ``out[e, j]`` iff ``u_lists[e, j]`` is in
+      ``v_lists[e]`` and within [0, num_bits).
+    """
+    return _probe_bits(_pack_rows(v_lists, num_bits), u_lists, num_bits)
 
 
 @functools.partial(jax.jit, static_argnames=("num_bits",))

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from repro.kernels.intersect.bitmap import (
     intersect_counts_bitmap,
     intersect_counts_bitmap_pallas,
+    intersect_matches_bitmap,
 )
 from repro.kernels.intersect.intersect import intersect_counts_pallas
 from repro.kernels.intersect.probe import (
@@ -53,7 +54,11 @@ __all__ = [
     "STRATEGIES",
     "intersect_counts",
     "intersect_counts_probe",
+    "intersect_matches",
+    "intersect_matches_both",
     "choose_strategy",
+    "choose_mask_strategy",
+    "resolve_mask_strategy",
     "resolve_strategy",
     "packed_bits",
 ]
@@ -133,6 +138,170 @@ def resolve_strategy(width: int, id_range=None, strategy: str = "auto"):
             raise ValueError("strategy='bitmap' needs id_range to size the bitmap")
         pw = packed_bits(width)
         bits = pw if int(id_range) <= pw else _ceil32(id_range)
+        if bits > BITMAP_MAX_BITS:
+            raise ValueError(
+                f"strategy='bitmap' would need a {bits}-bit bitmap for id "
+                f"range {int(id_range)} (cap: BITMAP_MAX_BITS={BITMAP_MAX_BITS}); "
+                f"use strategy='probe' (or 'auto') for this bucket"
+            )
+    return strategy, bits
+
+
+def _probe_mask(u_lists, v_lists):
+    """Probe-core membership mask: binary-search each u element in v."""
+
+    def one(u, v):
+        pos = jnp.clip(jnp.searchsorted(v, u), 0, v.shape[0] - 1)
+        return v[pos] == u
+
+    return jax.vmap(one)(u_lists, v_lists)
+
+
+def _resolve_mask_args(u_lists, v_lists, strategy, bitmap_bits):
+    """Shared strategy resolution for the mask entry points: "auto" uses
+    the concrete id range when available (``choose_mask_strategy``), the
+    width-only rule under tracing; forced bitmap sizes its capacity."""
+    if strategy == "auto":
+        strategy, bits = resolve_mask_strategy(
+            u_lists.shape[1], _auto_id_range(u_lists, v_lists)
+        )
+        if strategy == "bitmap":
+            bitmap_bits = bits
+    elif strategy == "bitmap" and bitmap_bits is None:
+        _, bitmap_bits = resolve_mask_strategy(
+            u_lists.shape[1], _auto_id_range(u_lists, v_lists),
+            strategy="bitmap",
+        )
+    elif strategy not in STRATEGIES:
+        raise ValueError(
+            f"unknown strategy {strategy!r}; expected 'auto' or one of {STRATEGIES}"
+        )
+    return strategy, bitmap_bits
+
+
+def intersect_matches(
+    u_lists: jnp.ndarray,
+    v_lists: jnp.ndarray,
+    *,
+    strategy: str = "auto",
+    bitmap_bits=None,
+) -> jnp.ndarray:
+    """Per-position membership mask: which u-list entries appear in v.
+
+    The mask form of ``intersect_counts`` — summing the result along the
+    last axis gives exactly the per-edge intersection sizes — consumed by
+    the engine's "vertex" and "edge" analysis executables, which need to
+    know WHICH common neighbor matched so they can scatter the triangle to
+    its three vertices / three edges. All three strategies apply: broadcast
+    (eq-any over the (E, W, W) compare tensor), probe (searchsorted), and
+    bitmap (pack v, gather-test each u element — the TRUST-style core,
+    picked by "auto" exactly when the id range fits the packed width).
+
+    Args:
+      u_lists: (E, W) int32, each row a sorted neighbor list padded with a
+        sentinel disjoint from v's.
+      v_lists: (E, W) int32, same layout, disjoint padding sentinel.
+      strategy: "auto" | "broadcast" | "probe" | "bitmap" — the same cost
+        model as ``intersect_counts`` (``choose_strategy``).
+      bitmap_bits: static bitmap capacity for strategy="bitmap"; must cover
+        the id range for exact agreement with the other strategies.
+
+    Returns:
+      (E, W) bool — ``out[e, j]`` iff ``u_lists[e, j]`` occurs in
+      ``v_lists[e]``. Padding positions are never True (disjoint sentinels).
+    """
+    strategy, bitmap_bits = _resolve_mask_args(u_lists, v_lists,
+                                               strategy, bitmap_bits)
+    if strategy == "broadcast":
+        return (u_lists[:, :, None] == v_lists[:, None, :]).any(axis=2)
+    if strategy == "bitmap":
+        return intersect_matches_bitmap(u_lists, v_lists,
+                                        num_bits=int(bitmap_bits))
+    return _probe_mask(u_lists, v_lists)
+
+
+def intersect_matches_both(
+    u_lists: jnp.ndarray,
+    v_lists: jnp.ndarray,
+    *,
+    strategy: str = "auto",
+    bitmap_bits=None,
+) -> tuple:
+    """Both directions of ``intersect_matches`` in one call.
+
+    Returns ``(matched_u, matched_v)`` — (E, W) bool masks of which u-list
+    positions occur in v and which v-list positions occur in u. For every
+    common element there is exactly one True in each mask (rows are
+    deduplicated neighbor lists), so both masks row-sum to the same
+    per-edge intersection sizes. The broadcast core shares one (E, W, W)
+    eq tensor between the two reductions; probe and bitmap each run two
+    passes with the roles swapped. The engine's "edge" executables consume
+    both masks to group triangle contributions by u-row and v-row
+    respectively.
+    """
+    strategy, bitmap_bits = _resolve_mask_args(u_lists, v_lists,
+                                               strategy, bitmap_bits)
+    if strategy == "broadcast":
+        eq = u_lists[:, :, None] == v_lists[:, None, :]
+        return eq.any(axis=2), eq.any(axis=1)
+    if strategy == "bitmap":
+        bits = int(bitmap_bits)
+        return (intersect_matches_bitmap(u_lists, v_lists, num_bits=bits),
+                intersect_matches_bitmap(v_lists, u_lists, num_bits=bits))
+    return _probe_mask(u_lists, v_lists), _probe_mask(v_lists, u_lists)
+
+
+def choose_mask_strategy(width: int, id_range=None) -> str:
+    """The ``strategy="auto"`` cost model for MASK consumers
+    (``intersect_matches`` / ``intersect_matches_both``).
+
+    The mask entry points pay differently than the counting ones: probe
+    masks run TWO vmapped searchsorted passes (one per direction) while the
+    bitmap mask packs each side once and then does O(W) word gathers — so
+    bitmap stays the winner well past the counting lane's
+    ``id_range ≤ packed_bits(width)`` rule. Measured on the CPU jnp paths
+    the crossover sits near B ≈ 4·W packed bits, which is the bound used
+    here (capped by ``BITMAP_MAX_BITS`` as everywhere).
+
+    Args:
+      width: the bucket's padded list width W (static).
+      id_range: number of distinct ids the lists may contain (the engine
+        passes ``n + 2``); None (e.g. under tracing) disqualifies bitmap.
+
+    Returns:
+      "bitmap" | "probe" | "broadcast".
+    """
+    if id_range is not None:
+        bits = _ceil32(id_range)
+        if bits <= BITMAP_MAX_BITS and bits <= 4 * packed_bits(width):
+            return "bitmap"
+    if width >= _PROBE_MIN_WIDTH:
+        return "probe"
+    return "broadcast"
+
+
+def resolve_mask_strategy(width: int, id_range=None, strategy: str = "auto"):
+    """Resolve an ("auto" or explicit) MASK strategy to (strategy, bitmap_bits).
+
+    The mask analogue of ``resolve_strategy``: "auto" applies
+    ``choose_mask_strategy``; an explicit "bitmap" sizes its capacity from
+    the id range (word-rounded), with the same ``BITMAP_MAX_BITS`` refusal.
+
+    Raises:
+      ValueError: bitmap forced with no ``id_range``, an id range past the
+        packed-bits cap, or an unknown strategy name.
+    """
+    if strategy == "auto":
+        strategy = choose_mask_strategy(width, id_range)
+    if strategy not in STRATEGIES:
+        raise ValueError(
+            f"unknown strategy {strategy!r}; expected 'auto' or one of {STRATEGIES}"
+        )
+    bits = None
+    if strategy == "bitmap":
+        if id_range is None:
+            raise ValueError("strategy='bitmap' needs id_range to size the bitmap")
+        bits = _ceil32(id_range)
         if bits > BITMAP_MAX_BITS:
             raise ValueError(
                 f"strategy='bitmap' would need a {bits}-bit bitmap for id "

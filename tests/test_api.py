@@ -92,6 +92,83 @@ def test_equal_options_share_cached_executables():
     assert info2["hits"] > info1["hits"]
 
 
+# --- the edge lane's cache keys ---------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(max_peel_iters=0),
+    dict(max_peel_iters=-3),
+    dict(max_peel_iters=2.5),
+    dict(max_peel_iters=True),  # bools are not iteration counts
+    dict(peel_early_exit="yes"),
+])
+def test_peel_knob_validation(bad):
+    with pytest.raises(ValueError):
+        CountOptions(**bad)
+
+
+def test_peel_knobs_participate_in_options_key():
+    base = CountOptions(algorithm="edge")
+    assert base.key() == CountOptions(algorithm="edge").key()
+    assert base.key() != CountOptions(algorithm="edge",
+                                      max_peel_iters=7).key()
+    assert base.key() != CountOptions(algorithm="edge",
+                                      peel_early_exit=False).key()
+
+
+def test_equal_edge_options_share_cached_edge_executables():
+    """Satellite acceptance (the test_prep_parity one-dispatch pattern):
+    two sessions from equal CountOptions — peel knobs included — share the
+    cached edge executables: no cache growth, no new misses, hits grow."""
+    g = rmat_graph(7, 6, seed=46)
+    truth = triangle_count_scipy(g)
+    o1 = CountOptions(algorithm="edge", max_peel_iters=50)
+    o2 = CountOptions(algorithm="edge", max_peel_iters=50)
+    assert o1 == o2 and hash(o1) == hash(o2) and o1.key() == o2.key()
+    c1 = TriangleCounter(g, o1)
+    assert c1.count() == truth
+    info1 = executable_cache_info()
+    c2 = TriangleCounter(g, o2)
+    assert c2.count() == truth
+    info2 = executable_cache_info()
+    assert info2["size"] == info1["size"]
+    assert info2["misses"] == info1["misses"]
+    assert info2["hits"] > info1["hits"]
+
+
+@pytest.mark.parametrize("knobs", [
+    dict(max_peel_iters=51),
+    dict(peel_early_exit=False),
+], ids=lambda d: next(iter(d)))
+def test_unequal_peel_knobs_miss_the_edge_executable_cache(knobs):
+    """Unequal peel knobs are distinct cache keys: a session differing only
+    in a peel knob compiles its own edge executables (cache misses grow)."""
+    g = rmat_graph(7, 6, seed=46)
+    truth = triangle_count_scipy(g)
+    base = CountOptions(algorithm="edge", max_peel_iters=50)
+    assert TriangleCounter(g, base).count() == truth
+    info1 = executable_cache_info()
+    other = base.replace(**knobs)
+    assert other.key() != base.key()
+    assert TriangleCounter(g, other).count() == truth
+    info2 = executable_cache_info()
+    assert info2["misses"] > info1["misses"]
+    assert info2["size"] > info1["size"]
+
+
+def test_edge_sidecar_shares_session_options_executables():
+    """k_truss from a non-edge session builds its sidecar from the SAME
+    options, so a second session's sidecar compiles nothing new."""
+    g = rmat_graph(7, 6, seed=47)
+    t1 = TriangleCounter(g, CountOptions(algorithm="intersection"))
+    t1.k_truss(3)
+    info1 = executable_cache_info()
+    t2 = TriangleCounter(g, CountOptions(algorithm="intersection"))
+    t2.k_truss(3)
+    info2 = executable_cache_info()
+    assert info2["size"] == info1["size"]
+    assert info2["misses"] == info1["misses"]
+
+
 # --- algorithm="auto" -------------------------------------------------------
 
 def test_auto_lane_choice_by_graph_shape():
@@ -256,7 +333,7 @@ def test_registry_surface():
     from repro.core import register_algorithm
 
     assert set(available_algorithms()) >= {
-        "intersection", "matrix", "subgraph",
+        "intersection", "matrix", "subgraph", "edge",
         "intersection_distributed", "matrix_distributed",
     }
     with pytest.raises(ValueError):

@@ -1,0 +1,81 @@
+"""The BENCH_<figure>.json sidecar contract, guarded by tier-1.
+
+PR 4 made every executed benchmark figure write a machine-readable sidecar
+(rows + env + device + argv) so the perf trajectory is comparable across
+PRs; until now only the CI bench-smoke job exercised it. This test runs the
+``fig_truss --smoke`` sweep in-process (which also differentially asserts
+host-vs-device k-truss agreement on every row pair) and validates the
+sidecar schema: rows non-empty and well-formed, env/device/argv present, no
+NaN cells.
+"""
+
+import json
+import math
+import pathlib
+import runpy
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+RUN_PY = ROOT / "benchmarks" / "run.py"
+
+
+@pytest.fixture(scope="module")
+def fig_truss_sidecar(tmp_path_factory):
+    """Run ``benchmarks/run.py --figures fig_truss --smoke`` in-process once
+    (sharing this pytest process's warm executable cache) and load the
+    sidecar it writes."""
+    json_dir = tmp_path_factory.mktemp("bench")
+    argv = ["run.py", "--figures", "fig_truss", "--smoke",
+            "--json-dir", str(json_dir)]
+    old_argv = sys.argv
+    sys.argv = argv
+    try:
+        runpy.run_path(str(RUN_PY), run_name="__main__")
+    finally:
+        sys.argv = old_argv
+    path = json_dir / "BENCH_fig_truss.json"
+    assert path.exists(), "fig_truss must write its sidecar"
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def test_sidecar_toplevel_schema(fig_truss_sidecar):
+    data = fig_truss_sidecar
+    assert {"figure", "smoke", "argv", "env", "device", "rows"} <= set(data)
+    assert data["figure"] == "fig_truss"
+    assert data["smoke"] is True
+    assert data["argv"][:3] == ["--figures", "fig_truss", "--smoke"]
+    assert {"python", "jax", "numpy", "platform"} <= set(data["env"])
+    assert isinstance(data["device"], str) and data["device"]
+
+
+def test_sidecar_rows_schema(fig_truss_sidecar):
+    rows = fig_truss_sidecar["rows"]
+    assert rows, "fig_truss must emit rows"
+    for row in rows:
+        assert {"name", "prep_us", "count_us", "derived"} <= set(row)
+        assert row["name"].startswith("fig_truss_")
+        for cell in ("prep_us", "count_us"):
+            assert isinstance(row[cell], (int, float))
+            assert not math.isnan(row[cell]) and not math.isinf(row[cell])
+            assert row[cell] >= 0.0
+        assert isinstance(row["derived"], str) and row["derived"]
+
+
+def test_sidecar_rows_pair_host_and_device(fig_truss_sidecar):
+    """Every graph gets a _host/_device row pair (bit-identical edge sets
+    are asserted inside the sweep itself), and each executed device row
+    records the peel round count."""
+    rows = {r["name"]: r for r in fig_truss_sidecar["rows"]}
+    hosts = {n[: -len("_host")] for n in rows if n.endswith("_host")}
+    devices = {n[: -len("_device")] for n in rows if n.endswith("_device")}
+    assert hosts and hosts == devices
+    assert any("clique-heavy" in n for n in hosts)  # the fixture row ran
+    for base in devices:
+        derived = rows[base + "_device"]["derived"]
+        assert "rounds=" in derived
+        # smoke lifts the budget, so every host row is a real measurement
+        # and every device row carries the speedup against it
+        assert "speedup=" in derived
