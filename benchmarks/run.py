@@ -35,6 +35,14 @@ Prints ``name,prep_us,count_us,derived`` CSV rows:
                clique-heavy fixture. Every pair asserts bit-identical
                surviving edge sets; the device row's derived field records
                the host/device speedup and the peel round count.
+  fig_stream_* — beyond-paper: dynamic-session streaming — identical random
+               insert/delete batches applied two ways: the incremental lane
+               (``DynamicTriangleCounter``: cached step + delta executables,
+               zero recompiles asserted across the timed stream) vs a
+               from-scratch intersection plan + count per batch. Per-batch
+               counts must agree and the final count is anchored against
+               the scipy oracle; derived records update throughput and the
+               recount/incremental speedup (gated ≥3× in smoke).
 
 Alongside the CSV, every executed figure is written as machine-readable
 ``BENCH_<figure>.json`` (rows + env + device + the exact argv) into
@@ -67,9 +75,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.graphs import DATASETS, edges_to_csr, load_dataset
+from repro.graphs import (
+    DATASETS, edges_to_csr, load_dataset, normalize_edge_updates,
+)
 from repro.core import (
-    CountOptions, GraphBatch, TriangleCounter, triangle_count_scipy,
+    CountOptions, DynamicTriangleCounter, GraphBatch, TriangleCounter,
+    triangle_count_scipy,
 )
 from repro.core.engine import get_executable, prepare_intersection_buckets
 from repro.core.listing import _k_truss_host
@@ -384,12 +395,112 @@ def fig_truss(datasets, *, budget: bool = True, iters: int = 2,
         _emit(f"fig_truss_{g.name}_k{k}_device", prep_us, dev_us, derived)
 
 
+def fig_stream(*, num_batches: int = 12, batch_edges: int = 64,
+               scale: int = 12, edge_factor: int = 6, seed: int = 17,
+               min_speedup: float = 0.0) -> None:
+    """Dynamic-session streaming: incremental deltas vs per-batch recounts.
+
+    One R-MAT graph takes ``num_batches`` random insert/delete batches two
+    ways over identical update streams: the ``_incremental`` row times a
+    ``DynamicTriangleCounter`` applying every batch through its cached
+    step + delta executables (asserting ZERO executable-cache misses across
+    the timed stream — the shape-class contract), and the ``_full-recount``
+    row times the static alternative, a from-scratch
+    ``TriangleCounter(..., algorithm="intersection")`` plan + count per
+    batch (the host edge set is maintained outside the timing). Both lanes
+    must produce identical per-batch counts, and the final count is
+    anchored against the scipy oracle. The incremental row's derived field
+    records batches/updates-per-second/recompiles; the full-recount row
+    records the recount/incremental speedup, gated at ``min_speedup`` when
+    non-zero (the smoke CI gate).
+    """
+    g = rmat_graph(scale, edge_factor, seed=seed)
+    n = g.n
+    rng = np.random.default_rng(seed)
+    # steady-state stream: per batch, half deletes sampled from the LIVE
+    # edge set and half random-pair inserts, so the edge count stays inside
+    # its capacity class (the zero-recompile contract under test — growing
+    # past the class is covered by tests/test_dynamic.py, not timed here).
+    # The same host walk records the post-batch snapshots the full-recount
+    # lane counts, all before any timing starts.
+    edges = set(zip(*(a.tolist() for a in g.edge_list_unique())))
+    batches, snapshots = [], []
+    for i in range(num_batches + 1):  # +1 warmup batch
+        k = batch_edges // 2
+        live = sorted(edges)
+        dels = [live[j] for j in
+                rng.choice(len(live), size=min(k, len(live)), replace=False)]
+        u = rng.integers(0, n, size=batch_edges - len(dels))
+        v = rng.integers(0, n, size=batch_edges - len(dels))
+        ups = [(a, b, False) for a, b in dels]
+        ups += [(int(a), int(b), True) for a, b in zip(u, v)]
+        batch = normalize_edge_updates(ups, n)
+        batches.append(batch)
+        for a, b, f in zip(*(x.tolist() for x in batch)):
+            (edges.add if f else edges.discard)((a, b))
+        if i > 0:  # snapshots for the full-recount lane (warmup excluded)
+            src = np.array([e[0] for e in sorted(edges)], dtype=np.int64)
+            dst = np.array([e[1] for e in sorted(edges)], dtype=np.int64)
+            snapshots.append(edges_to_csr(src, dst, n=n, name=f"stream{i}"))
+    warm_batch, stream = batches[0], batches[1:]
+
+    # incremental lane: prep covers session construction + the warmup batch
+    # (which compiles the step/delta executables for this shape class)
+    t0 = time.perf_counter()
+    dc = DynamicTriangleCounter(
+        g, CountOptions(algorithm="dynamic", update_batch_size=batch_edges,
+                        recount_interval=0))
+    dc.count()
+    dc.plan.apply_updates(*warm_batch)
+    inc_prep_us = (time.perf_counter() - t0) * 1e6
+    cache_before = dc.cache_stats()
+    inc_counts = []
+    t0 = time.perf_counter()
+    for lo, hi, ins in stream:
+        dc.plan.apply_updates(lo, hi, ins)
+        inc_counts.append(int(dc.count()))
+    inc_us = (time.perf_counter() - t0) * 1e6
+    recompiles = dc.cache_stats()["misses"] - cache_before["misses"]
+    assert recompiles == 0, f"fig_stream recompiled {recompiles}x mid-stream"
+    assert int(dc.count()) == triangle_count_scipy(dc.snapshot())
+    dc.recount()
+    upd_per_s = num_batches * batch_edges / (inc_us / 1e6)
+    _emit(f"fig_stream_rmat{scale}_incremental", inc_prep_us,
+          inc_us / num_batches,
+          f"batches={num_batches};upd_per_s={upd_per_s:.0f};"
+          f"recompiles={recompiles}")
+
+    # full-recount lane: the same stream counted from scratch per batch
+    # (the host snapshots were materialized before any timing)
+    opts = CountOptions(algorithm="intersection")
+    t0 = time.perf_counter()
+    # compile warmup over EVERY snapshot: per-snapshot bucket layouts can
+    # land in different shape classes, and leaving any compile inside the
+    # timed loop would inflate the speedup (and make it depend on what the
+    # process compiled earlier)
+    for s in snapshots:
+        int(TriangleCounter(s, opts).count())
+    full_prep_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    full_counts = [int(TriangleCounter(s, opts).count()) for s in snapshots]
+    full_us = (time.perf_counter() - t0) * 1e6
+    assert full_counts == inc_counts, "fig_stream lanes disagree"
+    speedup = full_us / max(inc_us, 1e-9)
+    if min_speedup:
+        assert speedup >= min_speedup, \
+            f"fig_stream speedup {speedup:.2f}x below gate {min_speedup}x"
+    _emit(f"fig_stream_rmat{scale}_full-recount", full_prep_us,
+          full_us / num_batches,
+          f"batches={num_batches};speedup={speedup:.2f}x")
+
+
 _SMOKE_DATASETS = ["tiny-rmat", "tiny-grid"]
 _SMOKE_SCALES = [7, 8]
 _BATCH_SIZES = (2, 4, 8, 16)
 _SMOKE_BATCH_SIZES = (4, 8)
 
-_FIGURES = ("table1", "fig5", "fig6", "strat", "fig_batch", "fig_truss")
+_FIGURES = ("table1", "fig5", "fig6", "strat", "fig_batch", "fig_truss",
+            "fig_stream")
 
 
 def main() -> None:
@@ -429,6 +540,12 @@ def main() -> None:
         fig_batch(batch_sizes, iters=iters)
     if "fig_truss" in figures:
         fig_truss(datasets, budget=budget, iters=iters)
+    if "fig_stream" in figures:
+        if args.smoke:
+            fig_stream(num_batches=6, batch_edges=32, scale=12,
+                       min_speedup=3.0)
+        else:
+            fig_stream()
     _write_json(figures, args.json_dir, args.smoke)
 
 

@@ -4,8 +4,19 @@ behind one front door.
 Public API:
     TriangleCounter / CountOptions / CountResult — the session facade: one
         typed options bag, one cached plan, cross-lane ``algorithm="auto"``
+    CounterSession — the shared session base (``count()`` /
+        ``count_with_stats()`` / ``cache_stats()``) both session types
+        expose
+    DynamicTriangleCounter / DynamicPlan / plan_dynamic_count /
+        EdgeUpdate / normalize_edge_updates — the dynamic lane
+        (``algorithm="dynamic"``): batched edge updates applied to the
+        device-resident CSR in place, incremental exact counts via cached
+        delta executables, periodic full-recount parity oracle
     register_algorithm / available_algorithms / choose_algorithm /
         set_auto_chooser — the algorithm registry + auto cost model
+    available_strategies — the valid intersection-strategy names (the
+        discovery twin of ``available_algorithms`` /
+        ``repro.graphs.available_datasets``)
     plan_triangle_count / TrianglePlan — the plan/execute engine underneath:
         device-resident prep (see ``repro.core.prep``), device buffers +
         cached compiled kernels
@@ -40,17 +51,26 @@ from repro.core.registry import (
 )
 from repro.core.engine import (
     STRATEGIES,
+    DynamicPlan,
     GraphBatch,
     TrianglePlan,
     TrussPlan,
     choose_strategy,
     clear_executable_cache,
     executable_cache_info,
+    plan_dynamic_count,
     plan_edge_support,
     plan_triangle_count,
     resolve_strategy,
 )
-from repro.core.api import CountResult, TriangleCounter
+from repro.core.api import (
+    CounterSession,
+    CountResult,
+    DynamicTriangleCounter,
+    TriangleCounter,
+)
+from repro.graphs.formats import EdgeUpdate, normalize_edge_updates
+from repro.kernels.intersect.ops import available_strategies
 from repro.core.tc_intersection import (
     triangle_count_intersection,
     prepare_intersection_buckets,
@@ -82,18 +102,25 @@ from repro.core.oracle import (
 __all__ = [
     "CountOptions",
     "CountResult",
+    "CounterSession",
     "TriangleCounter",
+    "DynamicTriangleCounter",
+    "DynamicPlan",
+    "EdgeUpdate",
+    "normalize_edge_updates",
     "DEFAULT_INTERPRET",
     "DEFAULT_WIDTHS",
     "resolve_interpret",
     "register_algorithm",
     "available_algorithms",
+    "available_strategies",
     "choose_algorithm",
     "set_auto_chooser",
     "STRATEGIES",
     "GraphBatch",
     "TrianglePlan",
     "TrussPlan",
+    "plan_dynamic_count",
     "plan_edge_support",
     "plan_triangle_count",
     "choose_strategy",

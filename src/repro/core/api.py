@@ -27,6 +27,22 @@ and per-edge (``edge_support`` / ``k_truss`` / ``truss_decomposition``, the
 ``count_with_stats()``: the count plus which lane ran, per-bucket strategies,
 prep/exec timings, and the live plan handle. It compares equal to plain ints
 (``res == triangle_count_scipy(g)``) so oracle checks read naturally.
+(``count_with_stats()`` survives on every session as a thin ``(int, dict)``
+view over the same result.)
+
+Both session types share the ``CounterSession`` base — one graph, one
+``CountOptions``, one lazily built plan, the process-wide executable cache:
+
+* ``TriangleCounter`` — the static session above.
+* ``DynamicTriangleCounter`` — the dynamic-graph session: seed it with a
+  ``Graph``, stream batched ``EdgeUpdate`` lists through
+  ``apply_updates()``, and the exact triangle count is maintained
+  incrementally on the device (``repro.core.engine.DynamicPlan``): updates
+  mutate the device-resident CSR in place inside ``ShapePolicy`` shape
+  classes (zero recompiles until an extent overflows its class, then
+  exactly one re-bucket), deltas come from cached executables that
+  intersect only the adjacency lists the batch touched, and a periodic
+  full recount asserts bit-exact parity.
 
 The legacy one-shot functions (``triangle_count_intersection`` /
 ``triangle_count_matrix`` / ``triangle_count_subgraph`` and the
@@ -45,11 +61,13 @@ from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.core import registry
-from repro.core.engine import GraphBatch, plan_triangle_count
+from repro.core.engine import (GraphBatch, executable_cache_info,
+                               plan_triangle_count)
 from repro.core.options import CountOptions
-from repro.graphs.formats import Graph
+from repro.graphs.formats import Graph, normalize_edge_updates
 
-__all__ = ["CountResult", "TriangleCounter", "warn_deprecated"]
+__all__ = ["CountResult", "CounterSession", "DynamicTriangleCounter",
+           "TriangleCounter", "warn_deprecated"]
 
 
 def warn_deprecated(old: str, new: str) -> None:
@@ -114,8 +132,16 @@ class CountResult:
                 f"exec_seconds={self.exec_seconds:.4f})")
 
 
-class TriangleCounter:
-    """A counting session: one graph, one typed options bag, one cached plan.
+class CounterSession:
+    """Shared machinery for every counting session type.
+
+    One graph, one typed ``CountOptions`` bag, one lazily built plan. Both
+    the static session (``TriangleCounter``) and the dynamic one
+    (``DynamicTriangleCounter``) expose the same core surface —
+    ``count()`` → ``CountResult``, ``count_with_stats()`` → ``(int,
+    dict)``, and the ``cache_stats()`` view of the engine's process-wide
+    executable cache — so callers can swap session types without touching
+    the measurement code around them.
 
     Args:
       g: the input ``Graph`` (undirected simple CSR).
@@ -125,12 +151,11 @@ class TriangleCounter:
         ``options`` (or the defaults) — ``TriangleCounter(g,
         algorithm="matrix", block=64)`` reads like the old free functions.
 
-    ``algorithm="auto"`` resolves ONCE at construction via the registry's
-    documented cost model (``choose_algorithm``); the choice is exposed as
-    ``.algorithm`` and in every ``CountResult``. The plan builds lazily on
-    first use and is replayed by every subsequent ``count()`` — equal options
-    over same-shaped graphs also share the engine's process-wide executable
-    cache, so a second session compiles nothing new.
+    Subclasses pick their registry lane via ``_resolve_algorithm`` (called
+    ONCE at construction; the choice is exposed as ``.algorithm`` and in
+    every ``CountResult``). The plan builds lazily on first use — equal
+    options over same-shaped graphs share the engine's process-wide
+    executable cache, so a second session compiles nothing new.
     """
 
     def __init__(self, g: Graph, options: Optional[CountOptions] = None,
@@ -146,11 +171,13 @@ class TriangleCounter:
         self.graph = g
         self.options = options
         self.mesh = mesh
-        self.algorithm = (options.algorithm if options.algorithm != "auto"
-                          else registry.choose_algorithm(g))
+        self.algorithm = self._resolve_algorithm()
         self._plan = None
-        self._vertex_counts: Optional[np.ndarray] = None
-        self._edge_sidecar = None
+
+    def _resolve_algorithm(self) -> str:
+        """Map the session's options to its registry lane (subclass hook)."""
+        return (self.options.algorithm if self.options.algorithm != "auto"
+                else registry.choose_algorithm(self.graph))
 
     @property
     def plan(self):
@@ -180,6 +207,39 @@ class TriangleCounter:
             meta=meta,
         )
 
+    def count_with_stats(self) -> Tuple[int, Dict[str, Any]]:
+        """The classic ``(count, stats)`` pair: the ``CountResult``'s count
+        and its meta dict, with the resolved lane under ``"algorithm"``."""
+        res = self.count()
+        stats = dict(res.meta)
+        stats["algorithm"] = res.algorithm
+        return res.count, stats
+
+    @staticmethod
+    def cache_stats() -> Dict[str, int]:
+        """Process-wide executable-cache statistics — a live ``{"size",
+        "hits", "misses"}`` snapshot of ``engine.executable_cache_info()``
+        (every session shares one cache, so deltas across calls measure
+        compilations caused in between)."""
+        return executable_cache_info()
+
+
+class TriangleCounter(CounterSession):
+    """A static counting session: one graph, one options bag, one cached
+    plan (see ``CounterSession`` for the shared surface and constructor).
+
+    On top of the shared surface, this session batches (``count_many`` /
+    ``iter_counts``) and carries the per-vertex / per-edge analysis
+    accessors, all routed through the cached plan and the engine's
+    executable cache.
+    """
+
+    def __init__(self, g: Graph, options: Optional[CountOptions] = None,
+                 *, mesh=None, **overrides):
+        super().__init__(g, options, mesh=mesh, **overrides)
+        self._vertex_counts: Optional[np.ndarray] = None
+        self._edge_sidecar = None
+
     def count_many(self, graphs: Iterable[Graph],
                    *, batch_size: int = 8) -> List[CountResult]:
         """Count a batch of graphs under this session's options.
@@ -202,6 +262,10 @@ class TriangleCounter:
         ``prep_seconds`` / ``exec_seconds`` are the WHOLE chunk's figures
         (``meta["batched"]`` / ``meta["batch_size"]`` mark them) — don't sum
         them across a chunk.
+
+        ``iter_counts`` is the generator twin: identical semantics and the
+        same ``batch_size`` chunking kwarg, but it yields results as each
+        chunk lands instead of materializing the list.
         """
         return list(self.iter_counts(graphs, batch_size=batch_size))
 
@@ -346,6 +410,79 @@ class TriangleCounter:
     def __repr__(self) -> str:
         return (f"TriangleCounter(graph={self.graph.name!r}, "
                 f"algorithm={self.algorithm!r}, "
+                f"planned={self._plan is not None})")
+
+
+class DynamicTriangleCounter(CounterSession):
+    """A dynamic-graph session: batched edge updates, incremental count.
+
+    Seed it with a ``Graph`` (possibly empty — ``edges_to_csr([], [],
+    n=...)``), then stream update batches through ``apply_updates``::
+
+        from repro.core import DynamicTriangleCounter, EdgeUpdate
+
+        dc = DynamicTriangleCounter(g, update_batch_size=256)
+        dc.count()                                   # seed count
+        dc.apply_updates([EdgeUpdate(0, 1),          # insert (default)
+                          EdgeUpdate(2, 3, insert=False),
+                          (4, 5)])                   # bare pair = insert
+        dc.count()                                   # maintained count
+
+    Updates are normalized on the host (oriented, self-loops dropped,
+    last-wins per edge within a batch — exact under set semantics), then
+    applied ``update_batch_size`` at a time by the cached device step +
+    delta executables of ``repro.core.engine.DynamicPlan``. ``count()`` is
+    O(1): the count is maintained, not recomputed. Duplicate inserts and
+    deletes of absent edges are no-ops. Every ``recount_interval`` batches
+    (a ``CountOptions`` knob; 0 disables) a full from-scratch recount
+    asserts the maintained count bit-exactly; ``recount()`` runs the same
+    oracle on demand and ``snapshot()`` materializes the current edge set
+    as a host ``Graph``.
+
+    The session always runs the "dynamic" registry lane: constructing it
+    with ``algorithm`` set to any other lane raises ``ValueError``.
+    """
+
+    def _resolve_algorithm(self) -> str:
+        if self.options.algorithm not in ("auto", "dynamic"):
+            raise ValueError(
+                f"DynamicTriangleCounter always runs the dynamic lane; "
+                f"got algorithm={self.options.algorithm!r} "
+                f"(expected one of ('auto', 'dynamic'))")
+        return "dynamic"
+
+    def apply_updates(self, updates) -> CountResult:
+        """Apply one batch of edge updates and return the refreshed count.
+
+        ``updates`` is any iterable of ``EdgeUpdate`` named tuples,
+        ``(u, v)`` pairs (implicit insert), or ``(u, v, insert)`` triples;
+        vertex ids must lie in ``[0, n)``. The returned ``CountResult``'s
+        ``exec_seconds`` covers the whole batch (update chunks + delta
+        passes), and its ``meta`` reflects the post-update session state.
+        """
+        lo, hi, ins = normalize_edge_updates(updates, self.graph.n)
+        plan = self.plan
+        t0 = time.perf_counter()
+        plan.apply_updates(lo, hi, ins)
+        res = self.count()
+        res.exec_seconds = time.perf_counter() - t0
+        return res
+
+    def recount(self) -> int:
+        """Run the full-recount parity oracle now (raises on drift)."""
+        return self.plan.recount()
+
+    def snapshot(self) -> Graph:
+        """The current device edge set as a host ``Graph``."""
+        return self.plan.snapshot()
+
+    @property
+    def m_undirected(self) -> int:
+        """The current number of live undirected edges."""
+        return self.plan.m
+
+    def __repr__(self) -> str:
+        return (f"DynamicTriangleCounter(graph={self.graph.name!r}, "
                 f"planned={self._plan is not None})")
 
 

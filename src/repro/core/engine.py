@@ -87,9 +87,13 @@ from repro.graphs.formats import (
 )
 from repro.graphs.device import (
     DEFAULT_SHAPE_POLICY,
+    EDGE_KEY_SENTINEL,
     DeviceCSR,
     DeviceGraph,
     ShapePolicy,
+    dynamic_update_step,
+    fits_int32_pair_keys,
+    next_pow2,
 )
 from repro.core import prep
 # _two_core_peel: back-compat re-export (it lived here before PR 4)
@@ -108,11 +112,13 @@ from repro.kernels.intersect.ops import (
 from repro.kernels.masked_spgemm.ops import masked_spgemm_counts
 
 __all__ = [
+    "DynamicPlan",
     "GraphBatch",
     "TrianglePlan",
     "TrussPlan",
     "plan_triangle_count",
     "plan_edge_support",
+    "plan_dynamic_count",
     "prepare_intersection_buckets",
     "build_tile_schedule",
     "choose_block",
@@ -286,6 +292,107 @@ def _build_edge_executable(strategy: str, bitmap_bits: Optional[int],
     return run
 
 
+def _build_dynamic_step_executable(shape_key: tuple) -> Callable:
+    """One jitted device step applying a padded edge-update batch in place.
+
+    ``shape_key`` is ``(cap, ub, n1, width)`` — the packed-key capacity
+    class, padded update rows, n + 1, and the anchor-row width class.
+    All four are :class:`~repro.graphs.device.ShapePolicy` pow2 extents, so
+    a session re-compiles only when an extent overflows its class (and then
+    exactly once: the classes grow monotonically and never shrink). The
+    body is :func:`repro.graphs.device.dynamic_update_step` — resolve the
+    batch against the sorted key orderings, tombstone deletes, merge
+    inserts, and gather the batch's anchor adjacency rows (pre- and
+    post-update) for the delta executables.
+    """
+    cap, ub, n1, width = (int(x) for x in shape_key)
+    del cap, ub  # fixed by the argument shapes; keyed for cache-stats
+
+    @jax.jit
+    def run(keys, rkeys, upd_keys, upd_rkeys, upd_ins, upd_valid):
+        return dynamic_update_step(keys, rkeys, upd_keys, upd_rkeys,
+                                   upd_ins, upd_valid,
+                                   n=n1 - 1, width=width)
+
+    return run
+
+
+def _resolve_delta_classes(bounds: Sequence[int], n: int, strategy: str,
+                           bitmap_bits: Optional[int]) -> list:
+    """Resolve the per-width match-mask strategy for a delta executable.
+
+    Same cost model as the edge lane (``resolve_mask_strategy`` over
+    id_range = n + 2, covering both in-row sentinels), with the same forced
+    ``bitmap_bits`` override semantics.
+    """
+    id_range = n + 2
+    resolved = []
+    for w in bounds:
+        strat, bits = resolve_mask_strategy(int(w), id_range, strategy)
+        if bitmap_bits is not None and strat == "bitmap":
+            if bitmap_bits < id_range:
+                raise ValueError(
+                    f"bitmap_bits={bitmap_bits} cannot cover vertex id "
+                    f"range {id_range} (n + 2 sentinel rows)")
+            bits = int(bitmap_bits)
+        resolved.append((strat, bits))
+    return resolved
+
+
+def _build_delta_executable(strategy: str, bitmap_bits: Optional[int],
+                            shape_key: tuple) -> Callable:
+    """Weighted triangle deltas for one padded batch of anchor edges.
+
+    ``shape_key`` is ``(ub, n1, *bounds)``: padded update rows, n + 1, and
+    the session's width classes — deliberately capacity-independent (the
+    inputs are the step's (ub, width) anchor-row blocks, not the key
+    arrays), so a capacity-class overflow recompiles only the step. The
+    executable re-buckets only the anchor
+    edges (``prep.delta_update_buckets``), runs the strategy-dispatched
+    match mask per class, and for every matched triangle (lo, hi, w) weighs
+    the contribution by how many of its three edges sit in the anchor set
+    ``skeys`` (a sorted packed-key array padded with ``EDGE_KEY_SENTINEL``):
+    a triangle containing k anchor edges is discovered once per anchor
+    edge, so weighting each hit 6/k — via the integer table [0, 6, 3, 2] —
+    makes the grand total exactly 6 x (#triangles touching the anchor set).
+    The caller asserts divisibility by 6 (a cheap drift tripwire) and
+    divides. Membership probes use clip-searchsorted-equality; sentinel
+    neighbors (w = n from in-row padding) can never equal a real key
+    (real keys have hi <= n - 1 mod n1) and padded rows (u = -1) go
+    negative, so padding contributes zero even before the match mask
+    gates it.
+    """
+    ub, n1 = int(shape_key[0]), int(shape_key[1])
+    bounds = tuple(int(w) for w in shape_key[2:])
+    n = n1 - 1
+    resolved = _resolve_delta_classes(bounds, n, strategy, bitmap_bits)
+
+    @jax.jit
+    def run(lo_rows, hi_rows, lo_deg, hi_deg, lo, hi, valid, skeys):
+        weight = jnp.array([0, 6, 3, 2], jnp.int32)
+        nn1 = jnp.int32(n1)
+        total = jnp.int32(0)
+        classes = prep.delta_update_buckets(lo_rows, hi_rows, lo_deg,
+                                            hi_deg, lo, hi, valid,
+                                            n=n, bounds=bounds)
+        for (_, u, v, sb, db), (strat, bits) in zip(classes, resolved):
+            matched = intersect_matches(u, v, strategy=strat,
+                                        bitmap_bits=bits)
+            s = sb[:, None]
+            d = db[:, None]
+            e1 = jnp.minimum(s, u) * nn1 + jnp.maximum(s, u)
+            e2 = jnp.minimum(d, u) * nn1 + jnp.maximum(d, u)
+            i1 = jnp.clip(jnp.searchsorted(skeys, e1), 0, ub - 1)
+            i2 = jnp.clip(jnp.searchsorted(skeys, e2), 0, ub - 1)
+            k = (1 + (skeys[i1] == e1).astype(jnp.int32)
+                 + (skeys[i2] == e2).astype(jnp.int32))
+            total = total + jnp.sum(jnp.where(matched, weight[k], 0),
+                                    dtype=jnp.int32)
+        return total
+
+    return run
+
+
 def get_executable(algorithm: str, backend: str, interpret: bool,
                    shape_key: tuple, strategy: Optional[str] = None,
                    bitmap_bits: Optional[int] = None) -> Callable:
@@ -297,7 +404,9 @@ def get_executable(algorithm: str, backend: str, interpret: bool,
         executables) | "matrix" | "vertex" (per-vertex triangle counts for
         one filtered bucket — the analysis path ``TriangleCounter`` routes
         through the plan) | "edge" (per-edge support contributions for one
-        filtered bucket — the ``TrussPlan`` lane).
+        filtered bucket — the ``TrussPlan`` lane) | "dynamic_step" /
+        "delta" (the ``DynamicPlan`` lane: the in-place edge-update step
+        and the anchored triangle-delta pass).
       backend: "jnp" | "pallas" | "ref" (see ``repro.kernels.*.ops``).
       interpret: pallas interpret mode flag (part of the key: interpret and
         compiled kernels are distinct executables).
@@ -345,6 +454,10 @@ def get_executable(algorithm: str, backend: str, interpret: bool,
             raise ValueError(f"unresolved strategy {strategy!r}; "
                              f"expected one of {STRATEGIES}")
         fn = _build_edge_executable(strategy, bitmap_bits, tuple(shape_key))
+    elif algorithm == "dynamic_step":
+        fn = _build_dynamic_step_executable(tuple(shape_key))
+    elif algorithm == "delta":
+        fn = _build_delta_executable(strategy, bitmap_bits, tuple(shape_key))
     else:
         raise ValueError(f"unknown algorithm {algorithm!r}")
     _EXECUTABLE_CACHE[key] = fn
@@ -1135,6 +1248,370 @@ def _edge_planner(g: Graph, options, *, mesh=None) -> TrussPlan:
 
 
 register_algorithm("edge", _edge_planner)
+
+
+# ---------------------------------------------------------------------------
+# DynamicPlan — the dynamic lane: batched edge updates, incremental count
+# ---------------------------------------------------------------------------
+
+class DynamicPlan:
+    """Device state + cached executables for one dynamic-graph session.
+
+    The plan owns a mutable device-resident edge set — two sorted
+    orderings of packed int32 keys, ``lo * (n + 1) + hi`` and
+    ``hi * (n + 1) + lo``, with ``EDGE_KEY_SENTINEL`` in dead slots; the
+    orderings ARE the adjacency (any vertex's neighbor row is two
+    contiguous runs) — and maintains the exact triangle count
+    incrementally across batched
+    :class:`~repro.graphs.formats.EdgeUpdate` streams:
+
+    1. a cached "dynamic_step" executable resolves the batch against the
+       key set (tombstone deletes, merge inserts, one sort per ordering
+       compacts) and gathers the batch's anchor-vertex adjacency rows —
+       pre- and post-update — in a single device dispatch that touches
+       O(batch) adjacency, never a full CSR/neighbor rebuild;
+    2. a cached "delta" executable counts triangles *anchored* on the
+       effective deletes against the pre-update adjacency (Δ⁻) and on the
+       effective inserts against the post-update adjacency (Δ⁺), with the
+       6/k multi-anchor weighting described in
+       ``_build_delta_executable``;
+    3. ``count = count − Δ⁻ + Δ⁺``.
+
+    Every array extent — key capacity, update rows, neighbor width — lives
+    in a :class:`~repro.graphs.device.ShapePolicy` class and only ever
+    grows, so steady-state batches replay two cached executables with zero
+    recompiles; crossing a class boundary re-buckets and compiles exactly
+    once (visible in ``executable_cache_info()``). Every
+    ``recount_interval`` batches (and on demand via :meth:`recount`) a full
+    from-scratch filtered-intersection recount over the device CSR checks
+    the incremental count bit-exactly and raises on drift.
+    """
+
+    algorithm = "dynamic"
+
+    def __init__(self, g: Graph, *, backend: str = "jnp",
+                 interpret: Optional[bool] = None,
+                 widths: Sequence[int] = DEFAULT_WIDTHS,
+                 strategy: str = "auto",
+                 bitmap_bits: Optional[int] = None,
+                 shape_policy: Optional[ShapePolicy] = None,
+                 update_batch_size: int = 256,
+                 recount_interval: int = 64):
+        if backend not in ("jnp", "pallas", "ref"):
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"expected 'jnp', 'pallas', or 'ref'")
+        if not fits_int32_pair_keys(g.n):
+            raise ValueError(
+                f"the dynamic lane packs undirected edges into int32 "
+                f"(lo, hi) keys, which needs (n + 1)² ≤ int32 max; "
+                f"n={g.n} is too large")
+        update_batch_size = int(update_batch_size)
+        recount_interval = int(recount_interval)
+        if update_batch_size < 1:
+            raise ValueError(
+                f"update_batch_size must be ≥ 1, got {update_batch_size}")
+        if recount_interval < 0:
+            raise ValueError(
+                f"recount_interval must be ≥ 0 (0 disables the periodic "
+                f"oracle), got {recount_interval}")
+        t0 = time.perf_counter()
+        self.graph = g
+        self.name = g.name
+        self.n = int(g.n)
+        self.backend = backend
+        self.interpret = resolve_interpret(interpret)
+        self.widths = tuple(int(w) for w in widths)
+        self.strategy = strategy
+        self.bitmap_bits = bitmap_bits
+        self.policy = (shape_policy if shape_policy is not None
+                       else DEFAULT_SHAPE_POLICY)
+        self.update_batch_size = update_batch_size
+        self.recount_interval = recount_interval
+        self.ub = self.policy.round_edges(update_batch_size)
+        # width class: the configured widths plus an optional pow2 top
+        # bound that only ever grows (never recomputed down — a denser
+        # interlude must not force a recompile on the way back)
+        self._extra_top: Optional[int] = None
+        dmax = int(g.max_degree)
+        if dmax > self.widths[-1]:
+            self._extra_top = next_pow2(dmax)
+        # upload the initial edge set as BOTH sorted key orderings
+        lo, hi = g.edge_list_unique()
+        self.m = int(lo.shape[0])
+        self.cap = self.policy.round_edges(self.m)
+        n1 = self.n + 1
+        host_keys = np.full(self.cap, EDGE_KEY_SENTINEL, np.int64)
+        host_keys[: self.m] = np.sort(
+            lo.astype(np.int64) * n1 + hi.astype(np.int64))
+        self._keys = jnp.asarray(host_keys.astype(np.int32))
+        host_rkeys = np.full(self.cap, EDGE_KEY_SENTINEL, np.int64)
+        host_rkeys[: self.m] = np.sort(
+            hi.astype(np.int64) * n1 + lo.astype(np.int64))
+        self._rkeys = jnp.asarray(host_rkeys.astype(np.int32))
+        self.batches = 0
+        self.inserted = 0
+        self.deleted = 0
+        self.recounts = 0
+        self.executions = 0
+        # prime: one all-padding step compiles this shape class
+        self._apply_step(
+            np.full(self.ub, EDGE_KEY_SENTINEL, np.int64),
+            np.full(self.ub, EDGE_KEY_SENTINEL, np.int64),
+            np.zeros(self.ub, bool), np.zeros(self.ub, bool))
+        self._count = self._full_recount()
+        self.meta = dict(
+            graph=self.name, n=self.n, m=self.m,
+            widths=self.widths, strategy=self.strategy,
+            shape_policy=self.policy.key(),
+            update_batch_size=self.update_batch_size,
+            update_rows=self.ub,
+            recount_interval=self.recount_interval,
+            bounds=self.bounds, capacity=self.cap,
+            bucket_strategies=self._bucket_strategies(),
+            batches=0, inserted=0, deleted=0, recounts=0,
+        )
+        self.prep_seconds = time.perf_counter() - t0
+
+    # -- shape classes ------------------------------------------------------
+
+    @property
+    def bounds(self) -> tuple:
+        """The session's width classes (widths plus the monotone top)."""
+        if self._extra_top is not None:
+            return self.widths + (self._extra_top,)
+        return self.widths
+
+    def _bucket_strategies(self) -> list:
+        id_range = self.n + 2
+        return [(int(w), resolve_mask_strategy(int(w), id_range,
+                                               self.strategy)[0])
+                for w in self.bounds]
+
+    def _maybe_grow_width(self, dmax: int) -> bool:
+        if dmax <= self.bounds[-1]:
+            return False
+        self._extra_top = next_pow2(dmax)
+        return True
+
+    def _grow_capacity(self, needed: int) -> None:
+        new_cap = self.policy.round_edges(needed)
+        if new_cap <= self.cap:  # pragma: no cover - rounding is monotone
+            raise AssertionError("capacity growth must be monotone")
+        pad = jnp.full(new_cap - self.cap, EDGE_KEY_SENTINEL, jnp.int32)
+        self._keys = jnp.concatenate([self._keys, pad])
+        self._rkeys = jnp.concatenate([self._rkeys, pad])
+        self.cap = new_cap
+
+    # -- cached executables -------------------------------------------------
+
+    def _step_executable(self) -> Callable:
+        return get_executable(
+            "dynamic_step", "jnp", False,
+            (self.cap, self.ub, self.n + 1, int(self.bounds[-1])))
+
+    def _delta_executable(self) -> Callable:
+        return get_executable(
+            "delta", "jnp", False, (self.ub, self.n + 1) + self.bounds,
+            strategy=self.strategy, bitmap_bits=self.bitmap_bits)
+
+    # -- update path --------------------------------------------------------
+
+    def _apply_step(self, upd_keys: np.ndarray, upd_rkeys: np.ndarray,
+                    upd_ins: np.ndarray, upd_valid: np.ndarray):
+        """Run one padded device step and return its full output tuple."""
+        return self._step_executable()(
+            self._keys, self._rkeys,
+            jnp.asarray(upd_keys.astype(np.int32)),
+            jnp.asarray(upd_rkeys.astype(np.int32)),
+            jnp.asarray(upd_ins), jnp.asarray(upd_valid))
+
+    def apply_updates(self, lo: np.ndarray, hi: np.ndarray,
+                      insert: np.ndarray) -> dict:
+        """Apply a normalized update stream and maintain the count.
+
+        Args are the arrays produced by
+        :func:`repro.graphs.formats.normalize_edge_updates` (oriented
+        lo < hi pairs, self-loops dropped, last-wins deduped). The stream
+        is chunked by ``update_batch_size``; each chunk runs the step +
+        two delta dispatches described in the class docstring. Returns the
+        refreshed ``meta`` dict.
+        """
+        lo = np.asarray(lo, dtype=np.int32)
+        hi = np.asarray(hi, dtype=np.int32)
+        insert = np.asarray(insert, dtype=bool)
+        ubs = self.update_batch_size
+        for s in range(0, int(lo.shape[0]), ubs):
+            self._apply_chunk(lo[s:s + ubs], hi[s:s + ubs],
+                              insert[s:s + ubs])
+        return self._sync_meta()
+
+    def _apply_chunk(self, lo_c: np.ndarray, hi_c: np.ndarray,
+                     ins_c: np.ndarray) -> None:
+        nu = int(lo_c.shape[0])
+        if nu == 0:
+            return
+        # host capacity pre-check: grow the key array BEFORE the step so
+        # the step executable compiles at most once per capacity class
+        n_ins_req = int(ins_c.sum())
+        if self.m + n_ins_req > self.cap:
+            self._grow_capacity(self.m + n_ins_req)
+        n1 = self.n + 1
+        upd_keys = np.full(self.ub, EDGE_KEY_SENTINEL, np.int64)
+        upd_keys[:nu] = lo_c.astype(np.int64) * n1 + hi_c.astype(np.int64)
+        upd_rkeys = np.full(self.ub, EDGE_KEY_SENTINEL, np.int64)
+        upd_rkeys[:nu] = hi_c.astype(np.int64) * n1 + lo_c.astype(np.int64)
+        upd_ins = np.zeros(self.ub, bool)
+        upd_ins[:nu] = ins_c
+        upd_valid = np.zeros(self.ub, bool)
+        upd_valid[:nu] = True
+        d_lo = np.zeros(self.ub, np.int32)
+        d_lo[:nu] = lo_c
+        d_hi = np.zeros(self.ub, np.int32)
+        d_hi[:nu] = hi_c
+        step_out = self._apply_step(upd_keys, upd_rkeys, upd_ins, upd_valid)
+        d_lo = jnp.asarray(d_lo)
+        d_hi = jnp.asarray(d_hi)
+        # Δ⁻: delete-anchored triangles against the PRE-update adjacency
+        # (launched before the stats sync; the old rows fit the old class)
+        (_, _, eff_ins, eff_del, ins_skeys, del_skeys,
+         old_lr, old_hr, old_ld, old_hd, _, _, _, _, st) = step_out
+        sum_del = self._delta_executable()(
+            old_lr, old_hr, old_ld, old_hd, d_lo, d_hi, eff_del, del_skeys)
+        # one small sync: the step stats drive the (rare) width growth
+        m_new, dmax_new, n_ins, n_del = (int(x) for x in np.asarray(st))
+        if self._maybe_grow_width(dmax_new):
+            # re-run the step once at the grown width class so the Δ⁺
+            # anchor rows carry the full widened adjacency; the new-class
+            # step/delta executables compile exactly once here (the
+            # pre-update state is still uncommitted, so this is a pure
+            # replay at the wider shape)
+            step_out = self._apply_step(upd_keys, upd_rkeys, upd_ins,
+                                        upd_valid)
+        (new_keys, new_rkeys, eff_ins, eff_del, ins_skeys, del_skeys,
+         _, _, _, _, new_lr, new_hr, new_ld, new_hd, st) = step_out
+        # Δ⁺: insert-anchored triangles against the POST-update adjacency
+        sum_ins = self._delta_executable()(
+            new_lr, new_hr, new_ld, new_hd, d_lo, d_hi, eff_ins, ins_skeys)
+        sdel, sins = (int(x) for x in
+                      np.asarray(jnp.stack([sum_del, sum_ins])))
+        if sdel % 6 or sins % 6:
+            raise RuntimeError(
+                f"dynamic delta drift on {self.name!r}: weighted anchor "
+                f"sums ({sdel}, {sins}) are not divisible by 6")
+        self._count += sins // 6 - sdel // 6
+        # commit the post-update device state
+        self._keys = new_keys
+        self._rkeys = new_rkeys
+        self.m = m_new
+        self.inserted += n_ins
+        self.deleted += n_del
+        self.executions += 1
+        self.batches += 1
+        if self.recount_interval and self.batches % self.recount_interval == 0:
+            self.recount()
+
+    # -- counting & the parity oracle ---------------------------------------
+
+    def _full_recount(self) -> int:
+        if self.m == 0:
+            return 0
+        # the rare oracle path: materialize the live keys as a CSR (the
+        # steady-state update path never builds one) and run the ordinary
+        # filtered-intersection plan stages over it
+        snap = self.snapshot()
+        csr = DeviceCSR(n=self.n, m=2 * self.m,
+                        row_ptr=jnp.asarray(snap.row_ptr),
+                        col_idx=jnp.asarray(snap.col_idx))
+        dg = DeviceGraph(csr, policy=self.policy,
+                         name=self.name + "+recount")
+        stages, _, _ = _plan_intersection(
+            dg, "filtered", self.backend, self.interpret, self.widths,
+            self.strategy, self.bitmap_bits, "device", self.policy)
+        return sum(int(st.executable(*st.args)) for st in stages)
+
+    def count(self) -> int:
+        """The incrementally maintained exact triangle count (O(1))."""
+        return self._count
+
+    def count_with_stats(self):
+        """(count, meta) with the meta refreshed to the current state."""
+        return self._count, self._sync_meta()
+
+    def recount(self) -> int:
+        """Full-recount parity oracle: count the device CSR from scratch
+        and raise ``RuntimeError`` if the incremental count has drifted."""
+        full = self._full_recount()
+        self.recounts += 1
+        if full != self._count:
+            raise RuntimeError(
+                f"incremental triangle count drifted on {self.name!r}: "
+                f"incremental={self._count}, full recount={full} after "
+                f"{self.batches} update batches")
+        return full
+
+    def snapshot(self) -> Graph:
+        """Materialize the current device edge set as a host ``Graph``."""
+        keys = np.asarray(self._keys).astype(np.int64)
+        keys = keys[keys != EDGE_KEY_SENTINEL]
+        lo, hi = _decode_edge_keys(keys, self.n + 1)
+        return edges_to_csr(lo, hi, n=self.n, name=self.name + "+dynamic")
+
+    def _sync_meta(self) -> dict:
+        self.meta.update(
+            m=self.m, capacity=self.cap, bounds=self.bounds,
+            bucket_strategies=self._bucket_strategies(),
+            batches=self.batches, inserted=self.inserted,
+            deleted=self.deleted, recounts=self.recounts)
+        return dict(self.meta)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"DynamicPlan(graph={self.name!r}, n={self.n}, m={self.m}, "
+                f"count={self._count}, batches={self.batches})")
+
+
+def plan_dynamic_count(
+    g: Graph,
+    *,
+    backend: str = "jnp",
+    interpret: Optional[bool] = None,
+    widths: Sequence[int] = DEFAULT_WIDTHS,
+    strategy: str = "auto",
+    bitmap_bits: Optional[int] = None,
+    shape_policy: Optional[ShapePolicy] = None,
+    update_batch_size: int = 256,
+    recount_interval: int = 64,
+) -> DynamicPlan:
+    """Open a dynamic-graph counting session seeded from ``g``.
+
+    Args:
+      g: the seed ``Graph`` (may be empty; packed edge keys need
+        ``(n + 1)² ≤ int32 max``, i.e. n ≲ 46k — larger graphs raise).
+      backend / interpret / widths / strategy / bitmap_bits / shape_policy:
+        as the intersection lane — they configure both the delta
+        executables and the periodic full recount.
+      update_batch_size: updates per device dispatch; longer streams are
+        chunked. Padded to a policy extent (the "update rows" class).
+      recount_interval: run the full-recount parity oracle every this many
+        batches (0 disables it; ``recount()`` is always available).
+
+    Returns:
+      A ``DynamicPlan``; the facade surfaces it as
+      ``DynamicTriangleCounter``, and ``CountOptions`` maps onto the
+      keyword arguments via ``plan_kwargs("dynamic")``.
+    """
+    return DynamicPlan(
+        g, backend=backend, interpret=interpret, widths=widths,
+        strategy=strategy, bitmap_bits=bitmap_bits,
+        shape_policy=shape_policy, update_batch_size=update_batch_size,
+        recount_interval=recount_interval)
+
+
+def _dynamic_planner(g: Graph, options, *, mesh=None) -> DynamicPlan:
+    """Registry planner: CountOptions → dynamic-lane DynamicPlan."""
+    return plan_dynamic_count(g, **options.plan_kwargs("dynamic"))
+
+
+register_algorithm("dynamic", _dynamic_planner)
 
 
 # ---------------------------------------------------------------------------

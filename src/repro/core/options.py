@@ -104,6 +104,14 @@ class CountOptions:
         ``DEFAULT_SHAPE_POLICY`` (pow2 rounding). Part of the cache key:
         same-policy graphs share traced prep stages and counting
         executables, which is what makes ``count_many`` batchable.
+      update_batch_size: dynamic lane — how many normalized edge updates one
+        device step applies; larger update lists are chunked. The policy
+        rounds it to the delta executables' static row extent, so it is part
+        of the dynamic lane's shape classes (and of ``key()``).
+      recount_interval: dynamic lane — run the full-recount parity oracle
+        every this many applied update batches and assert the incremental
+        count matches bit-exactly (the drift assertion). 0 disables the
+        periodic oracle (``recount()`` stays available on demand).
 
     Frozen ⇒ hashable: equal options hash equal, and the engine's
     executable-cache keys are functions of these fields, so equal options
@@ -125,6 +133,8 @@ class CountOptions:
     shape_policy: Optional[ShapePolicy] = None
     max_peel_iters: int = 1000
     peel_early_exit: bool = True
+    update_batch_size: int = 256
+    recount_interval: int = 64
 
     def __post_init__(self):
         # normalize widths to a tuple of ints so the dataclass stays hashable
@@ -205,6 +215,20 @@ class CountOptions:
             raise ValueError(
                 f"peel_early_exit must be a bool, got {self.peel_early_exit!r}"
             )
+        if not isinstance(self.update_batch_size, int) \
+                or isinstance(self.update_batch_size, bool) \
+                or self.update_batch_size < 1:
+            raise ValueError(
+                f"update_batch_size must be a positive int, "
+                f"got {self.update_batch_size!r}"
+            )
+        if not isinstance(self.recount_interval, int) \
+                or isinstance(self.recount_interval, bool) \
+                or self.recount_interval < 0:
+            raise ValueError(
+                f"recount_interval must be a non-negative int (0 disables "
+                f"the periodic oracle), got {self.recount_interval!r}"
+            )
 
     @property
     def resolved_interpret(self) -> bool:
@@ -228,6 +252,7 @@ class CountOptions:
             self.block, self.permute, self.bitmap_bits,
             self.prep_backend, self.resolved_shape_policy.key(),
             self.max_peel_iters, self.peel_early_exit,
+            self.update_batch_size, self.recount_interval,
         )
 
     def replace(self, **changes) -> "CountOptions":
@@ -263,4 +288,14 @@ class CountOptions:
                         shape_policy=self.shape_policy,
                         max_peel_iters=self.max_peel_iters,
                         peel_early_exit=self.peel_early_exit)
-        raise ValueError(f"unknown engine lane {lane!r}")
+        if lane == "dynamic":
+            return dict(backend=self.backend, interpret=self.interpret,
+                        widths=self.widths, strategy=self.strategy,
+                        bitmap_bits=self.bitmap_bits,
+                        shape_policy=self.shape_policy,
+                        update_batch_size=self.update_batch_size,
+                        recount_interval=self.recount_interval)
+        lanes = ("dynamic", "edge", "intersection", "matrix", "subgraph")
+        raise ValueError(
+            f"unknown engine lane {lane!r}; expected one of {lanes}"
+        )

@@ -73,6 +73,7 @@ __all__ = [
     "build_tile_schedule",
     "check_edge_key_range",
     "choose_block",
+    "delta_update_buckets",
     "forward_edge_keys_device",
     "forward_edge_keys_host",
     "induced_device_graph",
@@ -185,6 +186,70 @@ def prepare_intersection_buckets_device(
         )
         out.append(DeviceBucket(width=w, edges=c, u_lists=u, v_lists=v,
                                 src=sb, dst=db))
+    return out
+
+
+def delta_update_buckets(lo_rows: jnp.ndarray, hi_rows: jnp.ndarray,
+                         lo_deg: jnp.ndarray, hi_deg: jnp.ndarray,
+                         lo: jnp.ndarray, hi: jnp.ndarray,
+                         valid: jnp.ndarray, *, n: int,
+                         bounds: Sequence[int]) -> list:
+    """Incremental re-bucketing of one update batch's anchor edges (traced;
+    called from inside the engine's jitted delta executables).
+
+    The dynamic lane's analogue of ``prepare_intersection_buckets_device``,
+    restricted to the update batch: each masked anchor edge is assigned to
+    the first degree-class bound >= max(deg(lo), deg(hi)), then every class
+    is gathered to a **fixed** (ub, width) layout where ub = the batch row
+    extent. The adjacency source is the step's slot-indexed anchor-row
+    block — ``lo_rows[i]`` / ``hi_rows[i]`` are the endpoint rows of anchor
+    edge i, gathered straight from the sorted key orderings — so the whole
+    pass touches O(batch · width) data, never the full graph. Unlike the
+    static prep there is NO host sync and NO data-dependent extent — empty
+    classes are materialized as all-padding rows (u = -1 / v = -2, zero
+    matches in every core) — so the whole re-bucketing lives inside one
+    cached executable and updates never recompile within a shape class.
+
+    Args:
+      lo_rows, hi_rows: (ub, bounds[-1]) padded adjacency rows (in-row
+        sentinel ``n``, ascending) of each anchor edge's endpoints against
+        the graph side being counted.
+      lo_deg, hi_deg: (ub,) the matching endpoint degrees.
+      lo, hi: (ub,) anchor edge endpoints (lo < hi on valid rows).
+      valid: (ub,) mask of live anchor rows.
+      n: vertex count (static).
+      bounds: ascending degree-class bounds; ``bounds[-1]`` must be >= the
+        graph's max degree (the session maintains this monotonically).
+
+    Returns:
+      One ``(width, u_lists, v_lists, src, dst)`` tuple per bound, each
+      (ub, width)-shaped with the repo-wide sentinel conventions.
+    """
+    ub = int(lo.shape[0])
+    num_bounds = len(bounds)
+    barr = jnp.asarray(list(bounds), jnp.int32)
+    w = jnp.maximum(lo_deg, hi_deg)
+    b = jnp.searchsorted(barr, w, side="left")
+    b = jnp.where(valid, b, num_bounds).astype(jnp.int32)
+    order = jnp.argsort(b)  # stable: batch order preserved within a class
+    counts = jnp.bincount(b, length=num_bounds + 1)[:num_bounds]
+    starts = jnp.concatenate(
+        [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)])[:num_bounds]
+    rows = jnp.arange(ub)
+    out = []
+    for i, width in enumerate(bounds):
+        width = int(width)
+        bvalid = rows < counts[i]
+        slot = order[jnp.clip(starts[i] + rows, 0, max(ub - 1, 0))]
+        sb = jnp.where(bvalid, lo[slot], 0).astype(jnp.int32)
+        db = jnp.where(bvalid, hi[slot], 0).astype(jnp.int32)
+        u = jnp.where(bvalid[:, None], lo_rows[slot, :width],
+                      -1).astype(jnp.int32)
+        vfull = hi_rows[slot, :width]
+        v = jnp.where(bvalid[:, None],
+                      jnp.where(vfull == n, n + 1, vfull),
+                      -2).astype(jnp.int32)
+        out.append((width, u, v, sb, db))
     return out
 
 

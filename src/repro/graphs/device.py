@@ -47,11 +47,18 @@ from repro.graphs.formats import Graph
 
 __all__ = [
     "DEFAULT_SHAPE_POLICY",
+    "EDGE_KEY_SENTINEL",
     "DeviceCSR",
     "DeviceGraph",
     "ShapePolicy",
+    "dynamic_update_step",
     "next_pow2",
 ]
+
+# Dead slots in a sorted packed-edge-key array (the dynamic lane's edge-set
+# container) carry this value, so they sort past every real lo*(n+1)+hi key
+# (real keys are < (n+1)^2 <= int32 max by fits_int32_pair_keys).
+EDGE_KEY_SENTINEL: int = int(np.iinfo(np.int32).max)
 
 
 def next_pow2(x: int) -> int:
@@ -323,6 +330,137 @@ def _induced_compact_dev(row_ptr: jnp.ndarray, col_idx: jnp.ndarray,
         [jnp.zeros(1, jnp.int32), jnp.cumsum(deg).astype(jnp.int32)]
     )
     return row_ptr_sub, col, keep.sum()
+
+
+def _anchor_rows(keys: jnp.ndarray, rkeys: jnp.ndarray, verts: jnp.ndarray,
+                 valid: jnp.ndarray, *, n: int, width: int):
+    """Gather padded adjacency rows for a batch of anchor vertices straight
+    from the two sorted key orderings — no materialized (n, W) matrix.
+
+    For vertex v, the forward run of ``keys`` (sorted ``lo*(n+1)+hi``)
+    holds its neighbors > v and the run of ``rkeys`` (sorted
+    ``hi*(n+1)+lo``) its neighbors < v; both runs are located with two
+    searchsorted probes and are ascending, so emitting the reverse run
+    first yields a globally ascending row (the probe/bitmap cores require
+    sorted rows) padded with the in-row sentinel ``n``. Invalid anchors get
+    all-padding rows and degree 0. Returns ``(rows (B, width), deg (B,))``.
+    """
+    cap = int(keys.shape[0])
+    n1 = jnp.int32(n + 1)
+    v = jnp.clip(verts, 0, max(n - 1, 0)).astype(jnp.int32)
+    base = v * n1
+    # run boundaries: all of v's keys lie in [v*n1, v*n1 + n) and the fits
+    # check ((n+1)^2 <= int32 max) keeps v*n1 + n in range
+    sf = jnp.searchsorted(keys, base)
+    ef = jnp.searchsorted(keys, base + jnp.int32(n))
+    sr = jnp.searchsorted(rkeys, base)
+    er = jnp.searchsorted(rkeys, base + jnp.int32(n))
+    df = jnp.where(valid, ef - sf, 0)
+    dr = jnp.where(valid, er - sr, 0)
+    lanes = jnp.arange(width, dtype=jnp.int32)[None, :]
+    rev = rkeys[jnp.clip(sr[:, None] + lanes, 0, cap - 1)] % n1
+    fwd = keys[jnp.clip(sf[:, None] + lanes - dr[:, None], 0, cap - 1)] % n1
+    rows = jnp.where(
+        lanes < dr[:, None], rev,
+        jnp.where(lanes < (dr + df)[:, None], fwd, jnp.int32(n)))
+    return rows.astype(jnp.int32), (df + dr).astype(jnp.int32)
+
+
+def dynamic_update_step(keys: jnp.ndarray, rkeys: jnp.ndarray,
+                        upd_keys: jnp.ndarray, upd_rkeys: jnp.ndarray,
+                        upd_ins: jnp.ndarray, upd_valid: jnp.ndarray,
+                        *, n: int, width: int):
+    """One traced step of the dynamic lane: apply a batched edge update to
+    the device-resident edge set in place.
+
+    The edge set is kept in TWO sorted orderings of packed int32 keys —
+    ``keys`` by ``lo*(n+1)+hi`` and ``rkeys`` by ``hi*(n+1)+lo`` — each
+    with capacity ``keys.shape[0]`` (a ``ShapePolicy`` pow2 class) and
+    ``EDGE_KEY_SENTINEL`` in dead slots. Together the two orderings ARE the
+    adjacency structure: any vertex's neighbor row is two contiguous runs,
+    so per-batch work stays O(batch) gathers plus two capacity-length
+    sorts — no O(n·width) CSR / neighbor-matrix rebuild per step. The step:
+
+    1. *resolve* — membership-test the batch against the current key set:
+       effective deletes are requested deletes that are present, effective
+       inserts are requested inserts that are absent (set semantics; the
+       sorted side arrays feed the engine's delta executables).
+    2. *apply* — tombstone each deleted slot to the sentinel in place in
+       both orderings, then merge the insert candidates in and compact each
+       with one sort (tombstones and overflow slots sort past every live
+       key). The caller guarantees live-after <= capacity (it grows the key
+       arrays BEFORE the step when a batch could overflow, so this compiles
+       once per capacity class, not once per batch).
+    3. *gather* — anchor-vertex adjacency rows for the delta pass, at the
+       session's ``width`` class: rows/degrees of every update edge's
+       endpoints against BOTH the pre-update state (for Δ⁻) and the
+       post-update state (for Δ⁺), via :func:`_anchor_rows`.
+    4. *degrees* — the full (n,) degree vector of the new state from two
+       n-query searchsorted boundary scans (for the max-degree stat that
+       drives the rare monotone width-class growth).
+
+    Everything is statically shaped by ``(cap, ub, n, width)``; the engine
+    caches one jitted wrapper per such class (``"dynamic_step"`` in the
+    process-wide executable cache), so steady-state updates are a single
+    cached device dispatch.
+
+    Returns:
+      (new_keys, new_rkeys, eff_ins, eff_del, ins_skeys, del_skeys,
+      old_lo_rows, old_hi_rows, old_lo_deg, old_hi_deg,
+      new_lo_rows, new_hi_rows, new_lo_deg, new_hi_deg, stats) —
+      ``ins_skeys``/``del_skeys`` are the sorted effective-update forward
+      key arrays (sentinel padded); the ``*_rows``/``*_deg`` blocks are the
+      (ub, width)/(ub,) anchor adjacency of each update edge's lo/hi
+      endpoint; ``stats`` is ``[live_edges, max_degree, num_inserted,
+      num_deleted]`` int32, the step's single host-sync payload.
+    """
+    cap = int(keys.shape[0])
+    sent = jnp.int32(EDGE_KEY_SENTINEL)
+    n1 = jnp.int32(n + 1)
+    # -- resolve: which requests take effect against the current set
+    idx = jnp.clip(jnp.searchsorted(keys, upd_keys), 0, cap - 1)
+    present = (keys[idx] == upd_keys) & upd_valid
+    eff_del = present & ~upd_ins
+    eff_ins = upd_valid & upd_ins & ~present
+    del_skeys = jnp.sort(jnp.where(eff_del, upd_keys, sent))
+    ins_skeys = jnp.sort(jnp.where(eff_ins, upd_keys, sent))
+    # -- apply: tombstone deletes in place, merge-sort-compact inserts
+    # (both orderings; the reverse positions get their own searchsorted)
+    tomb = keys.at[jnp.where(eff_del, idx, cap)].set(sent, mode="drop")
+    new_keys = jnp.sort(jnp.concatenate(
+        [tomb, jnp.where(eff_ins, upd_keys, sent)]))[:cap]
+    ridx = jnp.clip(jnp.searchsorted(rkeys, upd_rkeys), 0, cap - 1)
+    rtomb = rkeys.at[jnp.where(eff_del, ridx, cap)].set(sent, mode="drop")
+    new_rkeys = jnp.sort(jnp.concatenate(
+        [rtomb, jnp.where(eff_ins, upd_rkeys, sent)]))[:cap]
+    # -- gather: anchor adjacency rows for the delta executables
+    ub = int(upd_keys.shape[0])
+    lo = jnp.where(upd_valid, upd_keys // n1, 0).astype(jnp.int32)
+    hi = jnp.where(upd_valid, upd_keys % n1, 0).astype(jnp.int32)
+    old_lo_rows, old_lo_deg = _anchor_rows(keys, rkeys, lo, upd_valid,
+                                           n=n, width=width)
+    old_hi_rows, old_hi_deg = _anchor_rows(keys, rkeys, hi, upd_valid,
+                                           n=n, width=width)
+    new_lo_rows, new_lo_deg = _anchor_rows(new_keys, new_rkeys, lo,
+                                           upd_valid, n=n, width=width)
+    new_hi_rows, new_hi_deg = _anchor_rows(new_keys, new_rkeys, hi,
+                                           upd_valid, n=n, width=width)
+    del ub
+    # -- degrees of the new state: two n-query boundary scans
+    live = (new_keys != sent).sum().astype(jnp.int32)
+    bnds = jnp.arange(n, dtype=jnp.int32) * n1
+    sf = jnp.searchsorted(new_keys, bnds)
+    sr = jnp.searchsorted(new_rkeys, bnds)
+    deg = (jnp.diff(jnp.append(sf, live)) + jnp.diff(jnp.append(sr, live)))
+    stats = jnp.stack([
+        live,
+        jnp.max(deg, initial=0).astype(jnp.int32),
+        eff_ins.sum().astype(jnp.int32),
+        eff_del.sum().astype(jnp.int32),
+    ])
+    return (new_keys, new_rkeys, eff_ins, eff_del, ins_skeys, del_skeys,
+            old_lo_rows, old_hi_rows, old_lo_deg, old_hi_deg,
+            new_lo_rows, new_hi_rows, new_lo_deg, new_hi_deg, stats)
 
 
 # ---------------------------------------------------------------------------

@@ -13,21 +13,99 @@ plumbing (here: numpy preprocessing) vs. the compute kernels (here: Pallas).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Iterable, NamedTuple, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 __all__ = [
     "Graph",
     "BlockSparse",
+    "EdgeUpdate",
     "edges_to_csr",
     "csr_to_padded_neighbors",
     "degree_order_permutation",
+    "normalize_edge_updates",
     "orient_forward",
     "to_block_sparse",
     "induced_subgraph",
     "bucket_edges_by_degree",
 ]
+
+
+class EdgeUpdate(NamedTuple):
+    """One streamed edge mutation: insert (default) or delete edge (u, v).
+
+    The dynamic lane (``repro.core.api.DynamicTriangleCounter``) consumes
+    batches of these. Endpoints are undirected — ``EdgeUpdate(3, 7)`` and
+    ``EdgeUpdate(7, 3)`` name the same edge. Inserting a present edge and
+    deleting an absent one are both no-ops (set semantics).
+    """
+
+    u: int
+    v: int
+    insert: bool = True
+
+
+def normalize_edge_updates(
+    updates: Iterable[Union[EdgeUpdate, Tuple[int, ...]]], n: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Canonicalize a batch of edge updates for the dynamic lane.
+
+    Accepts ``EdgeUpdate``s, ``(u, v)`` pairs (meaning insert), or
+    ``(u, v, insert)`` triples. Endpoints are canonicalized to ``lo < hi``,
+    self loops are dropped (the repo's graphs are simple), and updates
+    naming the same undirected edge are deduplicated **last-wins** — the
+    net effect of applying the batch in order is presence iff the last
+    update was an insert, which is exactly what the set semantics of
+    one batched apply need.
+
+    Args:
+      updates: the update batch, in application order.
+      n: vertex count; every endpoint must satisfy ``0 <= id < n``.
+
+    Returns:
+      (lo, hi, insert): int32 / int32 / bool numpy arrays, one row per
+      surviving distinct undirected edge.
+
+    Raises:
+      ValueError: malformed update tuples or out-of-range endpoints.
+    """
+    us, vs, ins = [], [], []
+    for upd in updates:
+        t = tuple(upd)
+        if len(t) == 2:
+            u, v, i = t[0], t[1], True
+        elif len(t) == 3:
+            u, v, i = t
+        else:
+            raise ValueError(
+                f"edge update must be (u, v) or (u, v, insert), got {upd!r}"
+            )
+        us.append(u)
+        vs.append(v)
+        ins.append(bool(i))
+    u = np.asarray(us, dtype=np.int64)
+    v = np.asarray(vs, dtype=np.int64)
+    flag = np.asarray(ins, dtype=bool)
+    if u.size:
+        bad = (u < 0) | (u >= n) | (v < 0) | (v >= n)
+        if bad.any():
+            j = int(np.flatnonzero(bad)[0])
+            raise ValueError(
+                f"edge update ({int(u[j])}, {int(v[j])}) out of range for "
+                f"n={n}; endpoints must satisfy 0 <= id < n"
+            )
+    lo = np.minimum(u, v)
+    hi = np.maximum(u, v)
+    keep = lo != hi  # drop self loops
+    lo, hi, flag = lo[keep], hi[keep], flag[keep]
+    if lo.size:
+        # last-wins dedup: reverse, keep first occurrence per key, restore order
+        key = lo * (n + 1) + hi
+        _, first_rev = np.unique(key[::-1], return_index=True)
+        idx = np.sort(key.shape[0] - 1 - first_rev)
+        lo, hi, flag = lo[idx], hi[idx], flag[idx]
+    return lo.astype(np.int32), hi.astype(np.int32), flag
 
 
 @dataclasses.dataclass(frozen=True)

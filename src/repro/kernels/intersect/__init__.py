@@ -1,6 +1,7 @@
 from repro.kernels.intersect.ops import (
     BITMAP_MAX_BITS,
     STRATEGIES,
+    available_strategies,
     choose_strategy,
     intersect_counts,
     intersect_counts_probe,
@@ -25,6 +26,7 @@ from repro.kernels.intersect.bitmap import (
 __all__ = [
     "BITMAP_MAX_BITS",
     "STRATEGIES",
+    "available_strategies",
     "choose_strategy",
     "resolve_strategy",
     "packed_bits",

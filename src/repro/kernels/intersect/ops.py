@@ -52,6 +52,7 @@ from repro.kernels.intersect.ref import intersect_counts_ref
 __all__ = [
     "BITMAP_MAX_BITS",
     "STRATEGIES",
+    "available_strategies",
     "intersect_counts",
     "intersect_counts_probe",
     "intersect_matches",
@@ -64,6 +65,15 @@ __all__ = [
 ]
 
 STRATEGIES = ("broadcast", "probe", "bitmap")
+
+
+def available_strategies() -> tuple:
+    """The valid set-intersection strategy names, sorted (the discovery
+    helper mirroring ``repro.graphs.available_datasets`` /
+    ``repro.core.available_algorithms``). Every ``strategy=`` kwarg accepts
+    these plus ``"auto"``, which resolves per bucket via the
+    ``choose_strategy`` / ``choose_mask_strategy`` cost models."""
+    return tuple(sorted(STRATEGIES))
 
 # O(W²) broadcast vs O(W log W) probe crossover: below this width the
 # gather-free broadcast compare wins on the VPU

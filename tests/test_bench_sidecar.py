@@ -4,9 +4,11 @@ PR 4 made every executed benchmark figure write a machine-readable sidecar
 (rows + env + device + argv) so the perf trajectory is comparable across
 PRs; until now only the CI bench-smoke job exercised it. This test runs the
 ``fig_truss --smoke`` sweep in-process (which also differentially asserts
-host-vs-device k-truss agreement on every row pair) and validates the
-sidecar schema: rows non-empty and well-formed, env/device/argv present, no
-NaN cells.
+host-vs-device k-truss agreement on every row pair) plus the ``fig_stream
+--smoke`` sweep (incremental vs full-recount parity, the zero-recompile
+contract, and the ≥3× smoke speedup gate all assert inside the sweep) and
+validates both sidecar schemas: rows non-empty and well-formed,
+env/device/argv present, no NaN cells.
 """
 
 import json
@@ -21,13 +23,12 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 RUN_PY = ROOT / "benchmarks" / "run.py"
 
 
-@pytest.fixture(scope="module")
-def fig_truss_sidecar(tmp_path_factory):
-    """Run ``benchmarks/run.py --figures fig_truss --smoke`` in-process once
+def _run_smoke_figure(tmp_path_factory, figure: str) -> dict:
+    """Run ``benchmarks/run.py --figures <figure> --smoke`` in-process
     (sharing this pytest process's warm executable cache) and load the
     sidecar it writes."""
     json_dir = tmp_path_factory.mktemp("bench")
-    argv = ["run.py", "--figures", "fig_truss", "--smoke",
+    argv = ["run.py", "--figures", figure, "--smoke",
             "--json-dir", str(json_dir)]
     old_argv = sys.argv
     sys.argv = argv
@@ -35,10 +36,20 @@ def fig_truss_sidecar(tmp_path_factory):
         runpy.run_path(str(RUN_PY), run_name="__main__")
     finally:
         sys.argv = old_argv
-    path = json_dir / "BENCH_fig_truss.json"
-    assert path.exists(), "fig_truss must write its sidecar"
+    path = json_dir / f"BENCH_{figure}.json"
+    assert path.exists(), f"{figure} must write its sidecar"
     with open(path, encoding="utf-8") as f:
         return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def fig_truss_sidecar(tmp_path_factory):
+    return _run_smoke_figure(tmp_path_factory, "fig_truss")
+
+
+@pytest.fixture(scope="module")
+def fig_stream_sidecar(tmp_path_factory):
+    return _run_smoke_figure(tmp_path_factory, "fig_stream")
 
 
 def test_sidecar_toplevel_schema(fig_truss_sidecar):
@@ -79,3 +90,47 @@ def test_sidecar_rows_pair_host_and_device(fig_truss_sidecar):
         # smoke lifts the budget, so every host row is a real measurement
         # and every device row carries the speedup against it
         assert "speedup=" in derived
+
+
+def test_stream_sidecar_toplevel_schema(fig_stream_sidecar):
+    data = fig_stream_sidecar
+    assert {"figure", "smoke", "argv", "env", "device", "rows"} <= set(data)
+    assert data["figure"] == "fig_stream"
+    assert data["smoke"] is True
+    assert data["argv"][:3] == ["--figures", "fig_stream", "--smoke"]
+    assert {"python", "jax", "numpy", "platform"} <= set(data["env"])
+    assert isinstance(data["device"], str) and data["device"]
+
+
+def test_stream_sidecar_rows_schema(fig_stream_sidecar):
+    rows = fig_stream_sidecar["rows"]
+    assert rows, "fig_stream must emit rows"
+    for row in rows:
+        assert {"name", "prep_us", "count_us", "derived"} <= set(row)
+        assert row["name"].startswith("fig_stream_")
+        for cell in ("prep_us", "count_us"):
+            assert isinstance(row[cell], (int, float))
+            assert not math.isnan(row[cell]) and not math.isinf(row[cell])
+            assert row[cell] >= 0.0
+        assert isinstance(row["derived"], str) and row["derived"]
+
+
+def test_stream_sidecar_pairs_incremental_and_full_recount(
+        fig_stream_sidecar):
+    """One _incremental/_full-recount row pair per fixture; the incremental
+    row proves the zero-recompile shape-class contract and the full-recount
+    row carries the speedup the smoke gate (≥3×) already enforced
+    in-process."""
+    rows = {r["name"]: r for r in fig_stream_sidecar["rows"]}
+    incs = {n[: -len("_incremental")] for n in rows
+            if n.endswith("_incremental")}
+    fulls = {n[: -len("_full-recount")] for n in rows
+             if n.endswith("_full-recount")}
+    assert incs and incs == fulls
+    for base in incs:
+        assert "recompiles=0" in rows[base + "_incremental"]["derived"]
+        assert "upd_per_s=" in rows[base + "_incremental"]["derived"]
+        speedup = rows[base + "_full-recount"]["derived"]
+        assert "speedup=" in speedup
+        x = float(speedup.split("speedup=")[1].rstrip("x"))
+        assert x >= 3.0

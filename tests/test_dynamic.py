@@ -1,0 +1,340 @@
+"""Dynamic sessions: incremental counts == from-scratch recounts, bit for bit.
+
+The differential harness for the dynamic lane (``DynamicTriangleCounter`` /
+``repro.core.engine.DynamicPlan``): after every batched edge update the
+incrementally maintained count must equal both the scipy oracle on a host
+snapshot and the lane's own full-recount parity oracle. Alongside parity:
+the shape-class contract (zero recompiles within a class, exactly one when
+a capacity or width extent overflows — asserted through the executable
+cache's hit/miss stats), dirty-input semantics (duplicate inserts, deletes
+of absent edges, self-loops, last-wins within a batch), the empty → dense →
+empty round trip, drift detection, the shared ``CounterSession`` surface,
+and a hypothesis insert/delete soak.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CountOptions,
+    CounterSession,
+    DynamicTriangleCounter,
+    EdgeUpdate,
+    TriangleCounter,
+    available_algorithms,
+    available_strategies,
+    executable_cache_info,
+    normalize_edge_updates,
+    plan_dynamic_count,
+    triangle_count_scipy,
+)
+from repro.graphs import (
+    ShapePolicy,
+    complete_graph,
+    edges_to_csr,
+    erdos_renyi_graph,
+    path_graph,
+)
+
+
+def _empty_graph(n, name="empty"):
+    z = np.array([], dtype=np.int64)
+    return edges_to_csr(z, z, n=n, name=name)
+
+
+def _random_updates(rng, n, k, p_insert=0.6):
+    u = rng.integers(0, n, size=k)
+    v = rng.integers(0, n, size=k)
+    ins = rng.random(k) < p_insert
+    return [(int(a), int(b), bool(f)) for a, b, f in zip(u, v, ins)]
+
+
+# ---------------------------------------------------------------------------
+# normalize_edge_updates — the host half of the update contract
+# ---------------------------------------------------------------------------
+
+def test_normalize_accepts_all_spellings_and_orients():
+    lo, hi, ins = normalize_edge_updates(
+        [EdgeUpdate(3, 1), (0, 2), (4, 0, False)], n=5)
+    assert lo.tolist() == [1, 0, 0]
+    assert hi.tolist() == [3, 2, 4]
+    assert ins.tolist() == [True, True, False]
+    assert lo.dtype == np.int32 and hi.dtype == np.int32
+
+
+def test_normalize_last_wins_and_drops_self_loops():
+    lo, hi, ins = normalize_edge_updates(
+        [(0, 1, True), (2, 2, True), (1, 0, False), (3, 4, False),
+         (4, 3, True)], n=5)
+    # (0,1): delete wins (later); (2,2) dropped; (3,4): insert wins
+    assert list(zip(lo.tolist(), hi.tolist(), ins.tolist())) == [
+        (0, 1, False), (3, 4, True)]
+
+
+def test_normalize_rejects_bad_input():
+    with pytest.raises(ValueError, match="out of range"):
+        normalize_edge_updates([(0, 9)], n=5)
+    with pytest.raises(ValueError, match="out of range"):
+        normalize_edge_updates([(-1, 2)], n=5)
+    with pytest.raises(ValueError):
+        normalize_edge_updates([(1,)], n=5)
+
+
+# ---------------------------------------------------------------------------
+# incremental == oracle on small deterministic streams
+# ---------------------------------------------------------------------------
+
+def test_insert_then_delete_matches_oracle():
+    g = edges_to_csr(np.array([0, 0, 1, 2]), np.array([1, 2, 2, 3]), n=5,
+                     name="seed")
+    dc = DynamicTriangleCounter(g, update_batch_size=8, recount_interval=0)
+    assert dc.count() == 1
+    res = dc.apply_updates([(1, 3), (2, 4), (3, 4)])
+    assert res == triangle_count_scipy(dc.snapshot())
+    assert res.algorithm == "dynamic"
+    res = dc.apply_updates([EdgeUpdate(0, 1, insert=False)])
+    assert res == triangle_count_scipy(dc.snapshot())
+    assert dc.recount() == int(res)
+
+
+def test_dirty_updates_are_noops():
+    g = complete_graph(6)
+    dc = DynamicTriangleCounter(g, update_batch_size=8, recount_interval=0)
+    before = int(dc.count())
+    assert before == 20  # C(6,3)
+    # duplicate insert, delete of an absent edge, self loop: all no-ops
+    dc.apply_updates([(0, 1, True), (0, 1, True)])
+    assert int(dc.count()) == before
+    dc.apply_updates([(2, 2, True)])
+    assert int(dc.count()) == before
+    g2 = _empty_graph(6, "e6")
+    dc2 = DynamicTriangleCounter(g2, update_batch_size=8, recount_interval=0)
+    dc2.apply_updates([(0, 1, False)])  # delete from an empty graph
+    assert int(dc2.count()) == 0
+    assert dc2.plan.meta["deleted"] == 0
+    dc2.recount()
+
+
+def test_empty_dense_empty_round_trip():
+    n = 10
+    dc = DynamicTriangleCounter(_empty_graph(n), update_batch_size=16,
+                                recount_interval=0)
+    assert dc.count() == 0
+    allp = [(a, b) for a in range(n) for b in range(a + 1, n)]
+    assert dc.apply_updates(allp) == 120  # C(10,3)
+    dc.recount()
+    assert dc.apply_updates([(a, b, False) for a, b in allp]) == 0
+    assert dc.m_undirected == 0
+    assert dc.snapshot().m_undirected == 0
+    dc.recount()
+
+
+def test_randomized_stream_parity():
+    rng = np.random.default_rng(7)
+    g = erdos_renyi_graph(64, avg_degree=6, seed=3)
+    dc = DynamicTriangleCounter(g, update_batch_size=32, recount_interval=0)
+    assert dc.count() == triangle_count_scipy(g)
+    for _ in range(6):
+        res = dc.apply_updates(_random_updates(rng, g.n, 50))
+        assert res == triangle_count_scipy(dc.snapshot())
+    assert dc.recount() == int(dc.count())
+
+
+def test_multi_chunk_batch_and_update_batch_size():
+    # one apply_updates call longer than update_batch_size chunks internally
+    rng = np.random.default_rng(11)
+    g = erdos_renyi_graph(40, avg_degree=5, seed=5)
+    dc = DynamicTriangleCounter(g, update_batch_size=8, recount_interval=0)
+    res = dc.apply_updates(_random_updates(rng, g.n, 60))
+    assert res == triangle_count_scipy(dc.snapshot())
+    assert dc.plan.meta["batches"] >= 2
+    assert dc.options.update_batch_size == 8
+
+
+# ---------------------------------------------------------------------------
+# shape classes: zero recompiles inside, exactly one on extent overflow
+# ---------------------------------------------------------------------------
+
+def test_steady_state_batches_never_recompile():
+    rng = np.random.default_rng(3)
+    g = erdos_renyi_graph(48, avg_degree=6, seed=1)
+    dc = DynamicTriangleCounter(g, update_batch_size=16, recount_interval=0)
+    dc.apply_updates(_random_updates(rng, g.n, 16))  # warm both executables
+    warm = dc.cache_stats()
+    for _ in range(5):
+        dc.apply_updates(_random_updates(rng, g.n, 16))
+    stats = dc.cache_stats()
+    assert stats["misses"] == warm["misses"]
+    assert stats["hits"] > warm["hits"]
+    assert dc.recount() == int(dc.count())
+
+
+def test_capacity_overflow_recompiles_exactly_once():
+    # pow2 capacity class: crossing it re-plans the step ONCE, and the next
+    # batches replay it — not once per subsequent batch (the ShapePolicy
+    # extent-overflow regression this test pins down)
+    n = 40
+    pairs = [(a, b) for a in range(n) for b in range(a + 1, n)]
+    seed = pairs[:120]
+    g = edges_to_csr(np.array([p[0] for p in seed]),
+                     np.array([p[1] for p in seed]), n=n, name="capgrow")
+    dc = DynamicTriangleCounter(g, update_batch_size=16, recount_interval=0)
+    assert dc.plan.cap == 128
+    dc.apply_updates([pairs[120]])  # warm (m=121, still inside cap 128)
+    warm = dc.cache_stats()
+    # 16 inserts push m past 128 -> capacity class doubles, one new step
+    # executable (the delta executables are capacity-independent)
+    dc.apply_updates(pairs[121:137])
+    assert dc.plan.cap == 256
+    grown = dc.cache_stats()
+    assert grown["misses"] == warm["misses"] + 1
+    # subsequent batches inside the new class: zero new compiles
+    for s in range(137, 185, 16):
+        dc.apply_updates(pairs[s:s + 16])
+    assert dc.cache_stats()["misses"] == grown["misses"]
+    assert dc.count() == triangle_count_scipy(dc.snapshot())
+    assert dc.recount() == int(dc.count())
+
+
+def test_width_overflow_rebuckets_once_and_stays_exact():
+    # degree pushed past the top width class mid-stream: the session grows
+    # its monotone top bound, re-gathers the neighbor matrix once, and the
+    # batch that crossed is still bit-exact
+    g = path_graph(24)
+    dc = DynamicTriangleCounter(
+        g, update_batch_size=16, recount_interval=0, widths=(8,))
+    assert dc.plan.bounds == (8,)
+    star = [(0, b) for b in range(2, 14)]  # degree(0) -> 13 > 8
+    res = dc.apply_updates(star)
+    assert dc.plan.bounds == (8, 16)
+    assert res == triangle_count_scipy(dc.snapshot())
+    # widths never shrink back, even after the hub is deleted again
+    dc.apply_updates([(u, v, False) for u, v in star])
+    assert dc.plan.bounds == (8, 16)
+    assert dc.recount() == int(dc.count())
+
+
+# ---------------------------------------------------------------------------
+# the parity oracle: cadence and drift detection
+# ---------------------------------------------------------------------------
+
+def test_periodic_recount_cadence():
+    rng = np.random.default_rng(5)
+    g = erdos_renyi_graph(32, avg_degree=4, seed=2)
+    dc = DynamicTriangleCounter(g, update_batch_size=8, recount_interval=2)
+    for _ in range(5):
+        dc.apply_updates(_random_updates(rng, g.n, 8))
+    assert dc.plan.meta["batches"] == 5
+    assert dc.plan.meta["recounts"] == 2  # after batches 2 and 4
+
+
+def test_recount_raises_on_drift():
+    g = complete_graph(7)
+    dc = DynamicTriangleCounter(g, update_batch_size=8, recount_interval=0)
+    dc.plan._count += 1  # corrupt the maintained count
+    with pytest.raises(RuntimeError, match="drifted"):
+        dc.recount()
+
+
+# ---------------------------------------------------------------------------
+# session surface + discovery helpers + invalid-name errors
+# ---------------------------------------------------------------------------
+
+def test_sessions_share_the_counter_session_surface():
+    g = complete_graph(5)
+    tc = TriangleCounter(g)
+    dc = DynamicTriangleCounter(g, recount_interval=0)
+    assert isinstance(tc, CounterSession)
+    assert isinstance(dc, CounterSession)
+    for sess in (tc, dc):
+        c, stats = sess.count_with_stats()
+        assert c == 10
+        assert stats["algorithm"] == sess.algorithm
+        cs = sess.cache_stats()
+        assert set(cs) == {"size", "hits", "misses"}
+    assert tc.cache_stats() == executable_cache_info()
+
+
+def test_dynamic_session_rejects_other_lanes():
+    g = complete_graph(4)
+    with pytest.raises(ValueError, match="'auto', 'dynamic'"):
+        DynamicTriangleCounter(g, algorithm="matrix")
+    # the dynamic lane is opt-in: auto never picks it for a static session
+    assert TriangleCounter(g).algorithm != "dynamic"
+
+
+def test_discovery_helpers():
+    assert "dynamic" in available_algorithms()
+    assert available_strategies() == ("bitmap", "broadcast", "probe")
+    assert available_strategies() == tuple(sorted(available_strategies()))
+
+
+def test_invalid_names_raise_value_errors_listing_choices():
+    with pytest.raises(ValueError, match="intersection"):
+        CountOptions(algorithm="bogus")
+    with pytest.raises(ValueError, match="broadcast"):
+        CountOptions(strategy="bogus")
+    with pytest.raises(ValueError, match="dynamic"):
+        CountOptions().plan_kwargs("bogus")
+    with pytest.raises(ValueError, match="update_batch_size"):
+        CountOptions(update_batch_size=0)
+    with pytest.raises(ValueError, match="recount_interval"):
+        CountOptions(recount_interval=-1)
+
+
+def test_options_key_folds_dynamic_knobs():
+    a = CountOptions()
+    b = CountOptions(update_batch_size=32)
+    c = CountOptions(recount_interval=0)
+    assert len({a.key(), b.key(), c.key()}) == 3
+
+
+def test_plan_dynamic_count_validates():
+    g = complete_graph(4)
+    with pytest.raises(ValueError, match="update_batch_size"):
+        plan_dynamic_count(g, update_batch_size=0)
+    with pytest.raises(ValueError, match="recount_interval"):
+        plan_dynamic_count(g, recount_interval=-1)
+    with pytest.raises(ValueError, match="backend"):
+        plan_dynamic_count(g, backend="bogus")
+
+
+def test_shape_policy_exact_still_exact():
+    # the "exact" policy trades maximal retracing for minimal padding; the
+    # counts must be unaffected
+    g = erdos_renyi_graph(24, avg_degree=4, seed=9)
+    dc = DynamicTriangleCounter(
+        g, update_batch_size=8, recount_interval=0,
+        shape_policy=ShapePolicy(edge_rounding="exact"))
+    dc.apply_updates([(0, 1), (1, 2), (0, 2), (2, 3)])
+    assert dc.count() == triangle_count_scipy(dc.snapshot())
+    assert dc.recount() == int(dc.count())
+
+
+# ---------------------------------------------------------------------------
+# numpy-rng soak (always runs; the hypothesis twin with minimization lives
+# in test_dynamic_property.py and skips where hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+def test_soak_random_streams_stay_exact():
+    n = 12  # fixed so every round shares the compiled shape classes
+    for round_seed in range(4):
+        rng = np.random.default_rng(100 + round_seed)
+        pairs = _random_updates(rng, n, rng.integers(0, 20), p_insert=1.0)
+        lo, hi, _ = normalize_edge_updates(pairs, n)
+        g = edges_to_csr(lo.astype(np.int64), hi.astype(np.int64), n=n,
+                         name=f"soak{round_seed}")
+        dc = DynamicTriangleCounter(g, update_batch_size=8,
+                                    recount_interval=0)
+        assert dc.count() == triangle_count_scipy(g)
+        for _ in range(3):
+            res = dc.apply_updates(
+                _random_updates(rng, n, int(rng.integers(0, 30))))
+            assert res == triangle_count_scipy(dc.snapshot())
+            assert dc.recount() == int(res)
+        # drain everything: back to the empty graph, count 0
+        slo, shi = dc.snapshot().edge_list_unique()
+        if slo.size:
+            assert dc.apply_updates(
+                [(int(a), int(b), False) for a, b in zip(slo, shi)]) == 0
+        assert dc.m_undirected == 0

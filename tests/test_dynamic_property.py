@@ -1,0 +1,48 @@
+"""Hypothesis soak for the dynamic lane: incremental == recount, bit for bit.
+
+Randomized insert/delete streams (duplicates, deletes of absent edges, and
+self loops included by construction) against two independent oracles after
+every batch — the scipy count of a host snapshot and the lane's own
+full-recount parity check — then a full drain back to the empty graph.
+Mirrors ``test_tc_property.py``: the module skips where hypothesis is not
+installed; ``test_dynamic.py``'s numpy-rng soak still runs there.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import DynamicTriangleCounter, triangle_count_scipy
+from repro.graphs import edges_to_csr
+
+_N = 12  # fixed so every example shares the compiled shape classes
+
+_updates_strategy = st.lists(
+    st.tuples(st.integers(0, _N - 1), st.integers(0, _N - 1),
+              st.booleans()),
+    min_size=0, max_size=30)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed_edges=st.lists(
+    st.tuples(st.integers(0, _N - 1), st.integers(0, _N - 1)),
+    max_size=20),
+    batches=st.lists(_updates_strategy, min_size=1, max_size=3))
+def test_soak_incremental_equals_recount(seed_edges, batches):
+    src = np.array([min(a, b) for a, b in seed_edges if a != b], np.int64)
+    dst = np.array([max(a, b) for a, b in seed_edges if a != b], np.int64)
+    g = edges_to_csr(src, dst, n=_N, name="soak")
+    dc = DynamicTriangleCounter(g, update_batch_size=8, recount_interval=0)
+    assert dc.count() == triangle_count_scipy(g)
+    for ups in batches:
+        res = dc.apply_updates(ups)
+        assert res == triangle_count_scipy(dc.snapshot())
+        assert dc.recount() == int(res)
+    # drain everything: back to the empty graph, count 0
+    lo, hi = dc.snapshot().edge_list_unique()
+    if lo.size:
+        assert dc.apply_updates(
+            [(int(a), int(b), False) for a, b in zip(lo, hi)]) == 0
+    assert dc.m_undirected == 0

@@ -2,8 +2,9 @@
 """Public-API snapshot gate (the CI `api` job; also runnable locally).
 
 Renders the public surface of `repro.core` — `__all__`, the facade's
-signatures (`TriangleCounter`, `CountOptions`, `CountResult`), the algorithm
-registry contents, and every public callable's signature — and compares it
+signatures (`CountOptions`, `CountResult`, `CounterSession`,
+`TriangleCounter`, `DynamicTriangleCounter`), the algorithm registry
+contents, and every public callable's signature — and compares it
 line-for-line against the committed `docs/api_surface.txt`, so future PRs
 change the API deliberately (regenerate + commit the snapshot) rather than
 by drift.
@@ -44,7 +45,12 @@ def _sig(fn) -> str:
 
 
 def _class_block(cls) -> list:
-    """One line per dataclass field / public method of ``cls``."""
+    """One line per dataclass field / public member of ``cls``.
+
+    Members are collected across the MRO (base first, so overrides win),
+    keeping inherited surface visible: ``DynamicTriangleCounter`` lists the
+    ``CounterSession`` methods it shares with ``TriangleCounter``.
+    """
     lines = [f"class {cls.__name__}"]
     if dataclasses.is_dataclass(cls):
         for f in dataclasses.fields(cls):
@@ -55,11 +61,18 @@ def _class_block(cls) -> list:
             else:
                 default = repr(f.default)
             lines.append(f"  field {f.name} = {default}")
-    for name, member in sorted(vars(cls).items()):
+    members: dict = {}
+    for base in reversed(cls.__mro__):
+        if base is object:
+            continue
+        members.update(vars(base))
+    for name, member in sorted(members.items()):
         if name.startswith("_"):
             continue
         if isinstance(member, property):
             lines.append(f"  property {name}")
+        elif isinstance(member, staticmethod):
+            lines.append(f"  def {name}{_sig(member.__func__)} [static]")
         elif callable(member):
             lines.append(f"  def {name}{_sig(member)}")
     return lines
@@ -76,7 +89,8 @@ def render() -> str:
     lines += list(registry.available_algorithms())
 
     lines += ["", "[facade]"]
-    for cls in (options.CountOptions, api.CountResult, api.TriangleCounter):
+    for cls in (options.CountOptions, api.CountResult, api.CounterSession,
+                api.TriangleCounter, api.DynamicTriangleCounter):
         lines += _class_block(cls)
 
     lines += ["", "[functions]"]
