@@ -35,6 +35,18 @@ Prints ``name,prep_us,count_us,derived`` CSV rows:
                clique-heavy fixture. Every pair asserts bit-identical
                surviving edge sets; the device row's derived field records
                the host/device speedup and the peel round count.
+  fig_auto_*  — beyond-paper: the measured ``algorithm="auto"`` chooser —
+               calibrates a per-device ``CalibrationTable`` from timed
+               micro-runs over the datasets (written as a
+               ``CALIB_<device>.json`` sidecar into ``--json-dir``), then
+               re-resolves every dataset through the facade with
+               ``chooser="measured"``: one row per (dataset, lane) records
+               that lane's measured count time, and the ``_auto`` row
+               records the table's pick, the true fastest lane, and the
+               pick/best time ratio (derived =
+               ``auto=<lane>;best=<lane>;ratio=<x>``; 1.00 = perfect —
+               ``tests/test_auto_dominance.py`` gates this at its
+               tolerance). Every auto count asserts the scipy oracle.
   fig_stream_* — beyond-paper: dynamic-session streaming — identical random
                insert/delete batches applied two ways: the incremental lane
                (``DynamicTriangleCounter``: cached step + delta executables,
@@ -80,8 +92,9 @@ from repro.graphs import (
 )
 from repro.core import (
     CountOptions, DynamicTriangleCounter, GraphBatch, TriangleCounter,
-    triangle_count_scipy,
+    calibrate, save_table, set_default_table, triangle_count_scipy,
 )
+from repro.core.calibrate import calib_path
 from repro.core.engine import get_executable, prepare_intersection_buckets
 from repro.core.listing import _k_truss_host
 from repro.kernels.intersect import (
@@ -395,6 +408,50 @@ def fig_truss(datasets, *, budget: bool = True, iters: int = 2,
         _emit(f"fig_truss_{g.name}_k{k}_device", prep_us, dev_us, derived)
 
 
+def fig_auto(datasets, *, iters: int = 2, json_dir: str = ".") -> None:
+    """Measured auto chooser: calibrate, persist the sidecar, audit picks.
+
+    Builds a per-device ``CalibrationTable`` by timing every chooser lane
+    on every dataset (warm best-of micro-runs, same policy as ``_time``),
+    writes it as ``CALIB_<device>.json`` into ``json_dir``, then installs
+    it and re-resolves each dataset through the facade with
+    ``chooser="measured"``. Per dataset: one row per lane with its
+    measured count time, plus the ``_auto`` row whose derived field
+    records the table's pick, the true fastest lane, and the pick/best
+    measured-time ratio. Every auto count asserts the scipy oracle; the
+    previously installed table is always restored.
+    """
+    graphs = [load_dataset(name) for name in datasets]
+    t0 = time.perf_counter()
+    table = calibrate(graphs, iters=iters, warmup=1)
+    calib_us = (time.perf_counter() - t0) * 1e6
+    os.makedirs(json_dir, exist_ok=True)
+    path = save_table(table, calib_path(json_dir))
+    print(f"# wrote {path} ({len(table.entries)} bins, "
+          f"calibrated in {calib_us / 1e6:.2f}s)", flush=True)
+    prev = set_default_table(table)
+    try:
+        for name, g in zip(datasets, graphs):
+            truth = triangle_count_scipy(g)
+            timings = table.lookup(g) or {}
+            for lane in sorted(timings):
+                _emit(f"fig_auto_{name}_{lane}", 0.0, timings[lane] * 1e6,
+                      "measured")
+            t0 = time.perf_counter()
+            result = TriangleCounter(g, CountOptions(chooser="measured")
+                                     ).count()
+            prep_us = (time.perf_counter() - t0) * 1e6
+            assert result == truth, (name, result.algorithm)
+            count_us = _time(result.plan.count, iters=iters)
+            best = min(sorted(timings), key=lambda l: timings[l])
+            ratio = (timings[result.algorithm]
+                     / max(timings[best], 1e-12))
+            _emit(f"fig_auto_{name}_auto", prep_us, count_us,
+                  f"auto={result.algorithm};best={best};ratio={ratio:.2f}")
+    finally:
+        set_default_table(prev)
+
+
 def fig_stream(*, num_batches: int = 12, batch_edges: int = 64,
                scale: int = 12, edge_factor: int = 6, seed: int = 17,
                min_speedup: float = 0.0) -> None:
@@ -500,7 +557,21 @@ _BATCH_SIZES = (2, 4, 8, 16)
 _SMOKE_BATCH_SIZES = (4, 8)
 
 _FIGURES = ("table1", "fig5", "fig6", "strat", "fig_batch", "fig_truss",
-            "fig_stream")
+            "fig_stream", "fig_auto")
+
+
+def _parse_figures(spec: str):
+    """Split and validate a ``--figures`` list. Unknown names raise
+    ``ValueError`` naming every valid figure, mirroring
+    ``repro.graphs.datasets.load_dataset``'s unknown-dataset error."""
+    figures = [f for f in spec.split(",") if f]
+    unknown = sorted(set(figures) - set(_FIGURES))
+    if unknown:
+        raise ValueError(
+            f"unknown figure(s) {', '.join(repr(f) for f in unknown)}; "
+            f"available: {', '.join(_FIGURES)}"
+        )
+    return figures
 
 
 def main() -> None:
@@ -516,16 +587,17 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.smoke:
-        figures = (args.figures or "table1,fig5").split(",")
+        spec = args.figures or "table1,fig5"
         datasets, scales, budget, iters = _SMOKE_DATASETS, _SMOKE_SCALES, False, 1
         batch_sizes = _SMOKE_BATCH_SIZES
     else:
-        figures = (args.figures or ",".join(_FIGURES)).split(",")
+        spec = args.figures or ",".join(_FIGURES)
         datasets, scales, budget, iters = DATASETS_FIG5, FIG6_SCALES, True, 2
         batch_sizes = _BATCH_SIZES
-    unknown = set(figures) - set(_FIGURES)
-    if unknown:
-        ap.error(f"unknown figures: {sorted(unknown)}")
+    try:
+        figures = _parse_figures(spec)
+    except ValueError as e:
+        ap.error(str(e))
 
     print("name,prep_us,count_us,derived")
     if "table1" in figures:
@@ -546,6 +618,8 @@ def main() -> None:
                        min_speedup=3.0)
         else:
             fig_stream()
+    if "fig_auto" in figures:
+        fig_auto(datasets, iters=iters, json_dir=args.json_dir)
     _write_json(figures, args.json_dir, args.smoke)
 
 

@@ -13,7 +13,18 @@ Public API:
         device-resident CSR in place, incremental exact counts via cached
         delta executables, periodic full-recount parity oracle
     register_algorithm / available_algorithms / choose_algorithm /
-        set_auto_chooser — the algorithm registry + auto cost model
+        set_auto_chooser — the algorithm registry + the heuristic auto
+        cost model
+    CalibrationTable / calibrate / analytic_seed / choose_measured /
+        install_measured_chooser / save_table / load_table /
+        set_default_table — the measured ``algorithm="auto"`` chooser
+        (``CountOptions(chooser="measured")``): per-device calibration
+        tables built from timed micro-runs, cold-started by HLO/roofline
+        pricing, persisted as ``CALIB_<device>.json`` sidecars
+    plan_hash_count / plan_bfs_count — direct planners for the two newest
+        lanes ("hash": TRUST-style per-vertex hash probing; "bfs":
+        level-ordered forward-edge closure over the shared intersection
+        executables)
     available_strategies — the valid intersection-strategy names (the
         discovery twin of ``available_algorithms`` /
         ``repro.graphs.available_datasets``)
@@ -38,6 +49,7 @@ Public API:
 """
 
 from repro.core.options import (
+    CHOOSERS,
     CountOptions,
     DEFAULT_INTERPRET,
     DEFAULT_WIDTHS,
@@ -58,10 +70,22 @@ from repro.core.engine import (
     choose_strategy,
     clear_executable_cache,
     executable_cache_info,
+    plan_bfs_count,
     plan_dynamic_count,
     plan_edge_support,
+    plan_hash_count,
     plan_triangle_count,
     resolve_strategy,
+)
+from repro.core.calibrate import (
+    CalibrationTable,
+    analytic_seed,
+    calibrate,
+    choose_measured,
+    install_measured_chooser,
+    load_table,
+    save_table,
+    set_default_table,
 )
 from repro.core.api import (
     CounterSession,
@@ -100,6 +124,8 @@ from repro.core.oracle import (
 )
 
 __all__ = [
+    "CHOOSERS",
+    "CalibrationTable",
     "CountOptions",
     "CountResult",
     "CounterSession",
@@ -120,8 +146,17 @@ __all__ = [
     "GraphBatch",
     "TrianglePlan",
     "TrussPlan",
+    "analytic_seed",
+    "calibrate",
+    "choose_measured",
+    "install_measured_chooser",
+    "load_table",
+    "save_table",
+    "set_default_table",
+    "plan_bfs_count",
     "plan_dynamic_count",
     "plan_edge_support",
+    "plan_hash_count",
     "plan_triangle_count",
     "choose_strategy",
     "resolve_strategy",

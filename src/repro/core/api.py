@@ -176,8 +176,18 @@ class CounterSession:
 
     def _resolve_algorithm(self) -> str:
         """Map the session's options to its registry lane (subclass hook)."""
-        return (self.options.algorithm if self.options.algorithm != "auto"
-                else registry.choose_algorithm(self.graph))
+        if self.options.algorithm != "auto":
+            return self.options.algorithm
+        return self._choose_auto(self.graph)
+
+    def _choose_auto(self, g: Graph) -> str:
+        """Resolve ``algorithm="auto"`` per ``options.chooser``: "measured"
+        consults the calibration table (``core.calibrate``, heuristic
+        fallback built in), "heuristic" keeps the registry's shape rules."""
+        if self.options.chooser == "measured":
+            from repro.core.calibrate import choose_measured
+            return choose_measured(g)
+        return registry.choose_algorithm(g)
 
     @property
     def plan(self):
@@ -297,7 +307,7 @@ class TriangleCounter(CounterSession):
                 continue
             lane = (self.options.algorithm
                     if self.options.algorithm != "auto"
-                    else registry.choose_algorithm(g))
+                    else self._choose_auto(g))
             if self._batchable(lane):
                 batchable.append((pos, g))
             else:

@@ -1,0 +1,428 @@
+"""Measured ``algorithm="auto"``: per-device calibration tables.
+
+The paper's central result is comparative — the winning formulation depends
+on the graph — and with five registered counting lanes the hand-written
+shape rules on ``registry._default_chooser`` stop being credible. This
+module replaces guessing with measurement:
+
+* ``graph_features`` / ``feature_key`` reduce a graph to a coarse bin:
+  its degree-class **bucket width** (the dominant static shape the engine
+  compiles for), a **degree-skew** band, and a **density** band — the same
+  axes the heuristic rules used, now indexing data instead of if-chains.
+* ``calibrate`` builds a :class:`CalibrationTable` by timing warm
+  ``plan.count()`` micro-runs per lane per feature bin (best-of-k, prep
+  excluded — plans are cached per session, so steady-state cost is the
+  count replay).
+* **Cold start is analytic, not blind**: ``analytic_seed`` prices each
+  lane's compiled stage executables with ``launch.hlo_cost.analyze_hlo`` +
+  ``launch.roofline.roofline_terms`` (AOT ``.lower().compile()``, no
+  execution), so a table can rank lanes for a bin no timing has visited.
+  Analytic entries never overwrite measured ones.
+* Tables persist as a ``CALIB_<device>.json`` sidecar (schema below) next
+  to the ``BENCH_*.json`` files; ``benchmarks/run.py --figures fig_auto``
+  writes one and ``tests/test_bench_sidecar.py`` gates the schema.
+
+Sidecar schema (``CALIB_SCHEMA_VERSION = 1``)::
+
+    {
+      "schema": 1,
+      "device": "<sanitized device kind>",
+      "created_unix": <float>,
+      "entries": [
+        {"key": ["w:32", "skew:low", "dens:sparse"],
+         "timings": {"intersection": 1.2e-4, "hash": 9.8e-5, ...},
+         "source": "measured" | "analytic"},
+        ...
+      ]
+    }
+
+Wiring: ``CountOptions(chooser="measured")`` makes the facade resolve
+``algorithm="auto"`` through ``choose_measured`` (exact bin hit, else the
+nearest measured bin, else the heuristic fallback), and
+``install_measured_chooser(table)`` swaps the process-wide chooser via
+``registry.set_auto_chooser`` for code that never touches options.
+Invalidation is by construction: the device label is part of the sidecar
+name, the schema version is checked on load, and a corrupt or mismatched
+sidecar silently falls back to the heuristic (the chooser must never be a
+crash surface).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core import registry
+from repro.core.options import CountOptions, DEFAULT_WIDTHS
+from repro.graphs.device import next_pow2
+
+__all__ = [
+    "CALIB_SCHEMA_VERSION",
+    "CHOOSER_LANES",
+    "CalibrationTable",
+    "analytic_seed",
+    "calib_path",
+    "calibrate",
+    "choose_measured",
+    "device_label",
+    "feature_key",
+    "graph_features",
+    "install_measured_chooser",
+    "load_table",
+    "measure_lanes",
+    "price_plan",
+    "save_table",
+    "set_default_table",
+]
+
+CALIB_SCHEMA_VERSION = 1
+
+# The single-host counting lanes the measured chooser ranks. Distributed
+# lanes stay opt-in by name (they need an explicit mesh), matching the
+# heuristic chooser's contract.
+CHOOSER_LANES = ("intersection", "matrix", "subgraph", "hash", "bfs")
+
+# feature-bin thresholds — shared with the heuristic rules they replace
+_SKEW_BANDS = ((3.0, "low"), (12.0, "mid"), (float("inf"), "high"))
+_DENSITY_BANDS = ((0.01, "thin"), (0.25, "sparse"), (float("inf"), "dense"))
+
+
+def device_label() -> str:
+    """Sanitized identity of the device the table is valid for.
+
+    Derived from the default device's ``device_kind`` (platform as a
+    fallback) with non-filename characters collapsed — it names the
+    ``CALIB_<device>.json`` sidecar, so a table can never be loaded onto a
+    different device kind by accident.
+    """
+    dev = jax.devices()[0]
+    raw = getattr(dev, "device_kind", "") or dev.platform
+    return re.sub(r"[^A-Za-z0-9._-]+", "-", str(raw)).strip("-") or "unknown"
+
+
+def calib_path(json_dir: str = ".", device: Optional[str] = None) -> str:
+    """The sidecar path for ``device`` (default: the current device)."""
+    return os.path.join(json_dir, f"CALIB_{device or device_label()}.json")
+
+
+def graph_features(g) -> dict:
+    """Raw chooser features of one graph (the bins hash ``feature_key``).
+
+    ``bucket_width`` is the degree-class width the engine would compile the
+    widest bucket at — the smallest ``DEFAULT_WIDTHS`` class covering the
+    max degree, or the next pow2 beyond the last class — i.e. the dominant
+    static shape, which is what actually prices a lane.
+    """
+    n, m, dmax = int(g.n), int(g.m_undirected), int(g.max_degree)
+    avg = 2.0 * m / n if n else 0.0
+    density = 2.0 * m / (n * (n - 1)) if n > 1 else 0.0
+    skew = dmax / avg if avg > 0 else 0.0
+    if m == 0 or dmax == 0:
+        width = 0
+    else:
+        width = next(
+            (w for w in DEFAULT_WIDTHS if dmax <= w), next_pow2(dmax)
+        )
+    return dict(n=n, m=m, max_degree=dmax, avg_degree=avg, density=density,
+                skew=skew, bucket_width=int(width))
+
+
+def _band(value: float, bands) -> str:
+    for bound, name in bands:
+        if value <= bound:
+            return name
+    return bands[-1][1]
+
+
+def feature_key(feats: dict) -> Tuple[str, str, str]:
+    """The coarse bin a graph's timings are filed under:
+    ``("w:<bucket_width>", "skew:<low|mid|high>", "dens:<thin|sparse|dense>")``.
+    """
+    return (
+        f"w:{feats['bucket_width']}",
+        f"skew:{_band(feats['skew'], _SKEW_BANDS)}",
+        f"dens:{_band(feats['density'], _DENSITY_BANDS)}",
+    )
+
+
+_SKEW_ORD = {"low": 0, "mid": 1, "high": 2}
+_DENS_ORD = {"thin": 0, "sparse": 1, "dense": 2}
+
+
+def _key_distance(a: Tuple[str, str, str], b: Tuple[str, str, str]) -> float:
+    """Ordinal distance between feature bins (nearest-bin fallback)."""
+    wa, wb = int(a[0][2:]), int(b[0][2:])
+    dw = abs(max(wa, 1).bit_length() - max(wb, 1).bit_length())
+    ds = abs(_SKEW_ORD[a[1][5:]] - _SKEW_ORD[b[1][5:]])
+    dd = abs(_DENS_ORD[a[2][5:]] - _DENS_ORD[b[2][5:]])
+    return dw + ds + dd
+
+
+@dataclasses.dataclass
+class CalibrationTable:
+    """Per-device lane timings, keyed by feature bin.
+
+    ``entries[key][lane]`` is the lane's representative seconds for that
+    bin (best observed across the calibration graphs landing in it);
+    ``sources[key]`` records whether the bin is "measured" (timed
+    micro-runs) or "analytic" (HLO/roofline pricing, the cold-start seed).
+    """
+
+    device: str
+    entries: Dict[Tuple[str, str, str], Dict[str, float]] = \
+        dataclasses.field(default_factory=dict)
+    sources: Dict[Tuple[str, str, str], str] = \
+        dataclasses.field(default_factory=dict)
+    schema: int = CALIB_SCHEMA_VERSION
+
+    def record(self, key: Tuple[str, str, str], timings: Dict[str, float],
+               source: str) -> None:
+        """Merge one bin's timings. Measured beats analytic; two measured
+        visits keep the per-lane minimum (best-case representative)."""
+        have = self.sources.get(key)
+        if have == "measured" and source == "analytic":
+            return
+        if have is None or (have == "analytic" and source == "measured"):
+            self.entries[key] = dict(timings)
+            self.sources[key] = source
+            return
+        merged = self.entries[key]
+        for lane, t in timings.items():
+            merged[lane] = min(merged.get(lane, float("inf")), float(t))
+
+    def lookup(self, g) -> Optional[Dict[str, float]]:
+        """The exact-bin timings for ``g``, or None."""
+        return self.entries.get(feature_key(graph_features(g)))
+
+    def choose(self, g) -> Optional[str]:
+        """The fastest lane for ``g``'s bin (nearest bin on a miss), or
+        None when the table is empty. Ties break lexicographically so the
+        choice is deterministic."""
+        if not self.entries:
+            return None
+        key = feature_key(graph_features(g))
+        timings = self.entries.get(key)
+        if timings is None:
+            key = min(self.entries, key=lambda k: (_key_distance(k, key), k))
+            timings = self.entries[key]
+        if not timings:
+            return None
+        return min(sorted(timings), key=lambda lane: timings[lane])
+
+
+# ---------------------------------------------------------------------------
+# Analytic seeding — price compiled executables without running them
+# ---------------------------------------------------------------------------
+
+def price_plan(plan) -> float:
+    """Analytic seconds for one plan's count stage.
+
+    Each stage executable is AOT-lowered and compiled (never executed); the
+    optimized HLO is priced by ``launch.hlo_cost.analyze_hlo`` with XLA's
+    own ``cost_analysis`` as the fallback, and ``launch.roofline`` turns
+    bytes/flops into time. The estimate is the sum over stages of the
+    max(compute, memory, collective) roofline term — a lower bound that is
+    nonetheless monotone in the work a lane dispatches, which is all a
+    *ranking* needs.
+    """
+    from repro.launch.roofline import roofline_terms
+
+    total = 0.0
+    for st in plan.stages:
+        compiled = st.executable.lower(*st.args).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        terms = roofline_terms(dict(cost or {}), compiled.as_text(),
+                               model_flops_per_chip=0.0)
+        total += max(terms.t_compute, terms.t_memory, terms.t_collective)
+    return total
+
+
+def _build_plan(g, lane: str, options: CountOptions):
+    planner = registry.get_algorithm(lane)
+    return planner(g, options.replace(algorithm=lane))
+
+
+def analytic_seed(g, lanes: Sequence[str] = CHOOSER_LANES,
+                  options: Optional[CountOptions] = None) -> Dict[str, float]:
+    """Cold-start lane pricing for one graph: {lane: analytic seconds}.
+
+    Deterministic for equal ``CountOptions`` — planning, lowering, and the
+    HLO cost walk are all pure functions of (graph, options, jax version) —
+    which is what lets a freshly seeded table make stable choices before
+    any timing exists (and what the invariance test in
+    ``tests/test_hlo_pricing.py`` asserts).
+    """
+    options = options if options is not None else CountOptions()
+    return {lane: price_plan(_build_plan(g, lane, options)) for lane in lanes}
+
+
+# ---------------------------------------------------------------------------
+# Measurement
+# ---------------------------------------------------------------------------
+
+def measure_lanes(g, lanes: Sequence[str] = CHOOSER_LANES,
+                  options: Optional[CountOptions] = None, *,
+                  iters: int = 2, warmup: int = 1) -> Dict[str, float]:
+    """Steady-state count seconds per lane: {lane: best-of-``iters``}.
+
+    Times the warm ``plan.count()`` replay only (prep excluded — a session
+    plans once and counts many times), after ``warmup`` untimed runs to
+    absorb compilation.
+    """
+    options = options if options is not None else CountOptions()
+    out: Dict[str, float] = {}
+    for lane in lanes:
+        plan = _build_plan(g, lane, options)
+        for _ in range(max(0, warmup)):
+            plan.count()
+        best = float("inf")
+        for _ in range(max(1, iters)):
+            t0 = time.perf_counter()
+            plan.count()
+            best = min(best, time.perf_counter() - t0)
+        out[lane] = best
+    return out
+
+
+def calibrate(graphs: Sequence, *, lanes: Sequence[str] = CHOOSER_LANES,
+              options: Optional[CountOptions] = None, iters: int = 2,
+              warmup: int = 1, measure: bool = True,
+              device: Optional[str] = None) -> CalibrationTable:
+    """Build a :class:`CalibrationTable` from a sweep of graphs.
+
+    Args:
+      graphs: the calibration fixtures; each lands in its feature bin.
+      lanes: lanes to rank (default ``CHOOSER_LANES``).
+      options: the ``CountOptions`` the plans are built with (default
+        ``CountOptions()`` — the production defaults).
+      iters / warmup: micro-run shape for the measured path.
+      measure: True times micro-runs (source "measured"); False prices
+        executables analytically instead (source "analytic") — the
+        cold-start mode, no kernel ever executes.
+      device: override the device label (tests); default the real one.
+    """
+    table = CalibrationTable(device=device or device_label())
+    for g in graphs:
+        key = feature_key(graph_features(g))
+        if measure:
+            timings = measure_lanes(g, lanes, options,
+                                    iters=iters, warmup=warmup)
+            table.record(key, timings, "measured")
+        else:
+            table.record(key, analytic_seed(g, lanes, options), "analytic")
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Persistence — the CALIB_<device>.json sidecar
+# ---------------------------------------------------------------------------
+
+def save_table(table: CalibrationTable, path: str) -> str:
+    """Write the sidecar (schema above); returns ``path``."""
+    doc = {
+        "schema": table.schema,
+        "device": table.device,
+        "created_unix": time.time(),
+        "entries": [
+            {"key": list(key), "timings": dict(table.entries[key]),
+             "source": table.sources.get(key, "measured")}
+            for key in sorted(table.entries)
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    return path
+
+
+def load_table(path: str) -> CalibrationTable:
+    """Read and validate a sidecar.
+
+    Raises:
+      ValueError: unknown schema version or malformed entries — callers
+        that must never crash (the default-table search) catch this and
+        fall back to the heuristic chooser.
+    """
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != CALIB_SCHEMA_VERSION:
+        raise ValueError(
+            f"calibration sidecar {path!r} has schema {doc.get('schema')!r}; "
+            f"this build reads schema {CALIB_SCHEMA_VERSION}"
+        )
+    table = CalibrationTable(device=str(doc.get("device", "unknown")))
+    for ent in doc.get("entries", []):
+        key = tuple(ent["key"])
+        if len(key) != 3:
+            raise ValueError(f"malformed entry key {key!r} in {path!r}")
+        timings = {str(k): float(v) for k, v in ent["timings"].items()}
+        table.record(key, timings, str(ent.get("source", "measured")))
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Chooser wiring
+# ---------------------------------------------------------------------------
+
+_DEFAULT_TABLE: Optional[CalibrationTable] = None
+_DEFAULT_LOADED = False
+
+
+def set_default_table(table: Optional[CalibrationTable]
+                      ) -> Optional[CalibrationTable]:
+    """Install the process-wide table ``chooser="measured"`` consults.
+
+    Passing None clears it AND re-arms the disk search (``TC_CALIB`` env
+    path, else ``./CALIB_<device>.json``). Returns the previous table so
+    callers can restore it.
+    """
+    global _DEFAULT_TABLE, _DEFAULT_LOADED
+    previous = _DEFAULT_TABLE
+    _DEFAULT_TABLE = table
+    _DEFAULT_LOADED = table is not None
+    return previous
+
+
+def get_default_table() -> Optional[CalibrationTable]:
+    """The process-wide table, loading the sidecar lazily on first use."""
+    global _DEFAULT_TABLE, _DEFAULT_LOADED
+    if not _DEFAULT_LOADED:
+        path = os.environ.get("TC_CALIB") or calib_path(".")
+        if os.path.exists(path):
+            try:
+                _DEFAULT_TABLE = load_table(path)
+            except (ValueError, OSError, KeyError, TypeError):
+                _DEFAULT_TABLE = None  # corrupt sidecar ⇒ heuristic fallback
+        _DEFAULT_LOADED = True
+    return _DEFAULT_TABLE
+
+
+def choose_measured(g, table: Optional[CalibrationTable] = None) -> str:
+    """Resolve ``algorithm="auto"`` through a calibration table.
+
+    Exact feature-bin hit → fastest measured lane; miss → nearest bin;
+    no table / empty table / stale lane name → the heuristic
+    ``registry._default_chooser``. Always returns a registered lane.
+    """
+    table = table if table is not None else get_default_table()
+    if table is not None:
+        lane = table.choose(g)
+        if lane is not None and lane in registry.available_algorithms():
+            return lane
+    return registry._default_chooser(g)
+
+
+def install_measured_chooser(table: Optional[CalibrationTable] = None
+                             ) -> Callable:
+    """Swap the process-wide ``algorithm="auto"`` chooser to the measured
+    one (for callers that never touch ``CountOptions``). Returns the
+    previous chooser — pass it back to ``registry.set_auto_chooser`` to
+    restore."""
+    return registry.set_auto_chooser(lambda g: choose_measured(g, table))

@@ -91,6 +91,7 @@ from repro.graphs.device import (
     DeviceCSR,
     DeviceGraph,
     ShapePolicy,
+    bfs_levels,
     dynamic_update_step,
     fits_int32_pair_keys,
     next_pow2,
@@ -109,6 +110,12 @@ from repro.kernels.intersect.ops import (
     resolve_mask_strategy,
     resolve_strategy,
 )
+from repro.kernels.hash_tc.ops import (
+    build_hash_table,
+    hash_num_buckets,
+    hash_probe_counts,
+    hash_table_depth,
+)
 from repro.kernels.masked_spgemm.ops import masked_spgemm_counts
 
 __all__ = [
@@ -117,8 +124,10 @@ __all__ = [
     "TrianglePlan",
     "TrussPlan",
     "plan_triangle_count",
+    "plan_bfs_count",
     "plan_edge_support",
     "plan_dynamic_count",
+    "plan_hash_count",
     "prepare_intersection_buckets",
     "build_tile_schedule",
     "choose_block",
@@ -131,7 +140,7 @@ __all__ = [
     "STRATEGIES",
 ]
 
-ALGORITHMS = ("intersection", "matrix", "subgraph")
+ALGORITHMS = ("intersection", "matrix", "subgraph", "hash", "bfs")
 
 
 # ---------------------------------------------------------------------------
@@ -197,6 +206,29 @@ def _build_matrix_executable(backend: str, interpret: bool) -> Callable:
             l_tiles, u_tiles, a_tiles, backend=backend, interpret=interpret
         )
         return jnp.sum(partials)
+
+    return run
+
+
+def _build_hash_executable(backend: str, interpret: bool) -> Callable:
+    """Per-bucket total for the TRUST-style hashing lane.
+
+    The stage args are ``(v_lists, src, table)``: the bucket's candidate
+    rows (N⁺(dst), the standard v-side sentinel layout), their anchor
+    vertices, and the plan-wide (n, B, D) per-vertex hash table. The core
+    (``repro.kernels.hash_tc``) probes each candidate against its anchor's
+    hash row, so per-edge work is O(W·D) instead of the sorted-merge costs.
+    The cache ``shape_key`` is ``(e_pad, width, num_buckets, depth)`` — the
+    table shape class rides in the key because the traced gather shapes
+    depend on it.
+    """
+
+    @jax.jit
+    def run(w_lists, src, table):
+        counts = hash_probe_counts(
+            w_lists, src, table, backend=backend, interpret=interpret
+        )
+        return jnp.sum(counts)
 
     return run
 
@@ -400,8 +432,12 @@ def get_executable(algorithm: str, backend: str, interpret: bool,
     unit.
 
     Args:
-      algorithm: "intersection" | "subgraph" (both use the intersection
-        executables) | "matrix" | "vertex" (per-vertex triangle counts for
+      algorithm: "intersection" | "subgraph" | "bfs" (all three use the
+        intersection executables — the BFS lane's wedge closure is the same
+        per-bucket computation over level-oriented rows, so it shares the
+        compiled kernels) | "matrix" | "hash" (the TRUST-style per-vertex
+        hash-probe stage, shape_key ``(e_pad, width, num_buckets, depth)``)
+        | "vertex" (per-vertex triangle counts for
         one filtered bucket — the analysis path ``TriangleCounter`` routes
         through the plan) | "edge" (per-edge support contributions for one
         filtered bucket — the ``TrussPlan`` lane) | "dynamic_step" /
@@ -447,6 +483,8 @@ def get_executable(algorithm: str, backend: str, interpret: bool,
                                          bitmap_bits)
     elif algorithm == "matrix":
         fn = _build_matrix_executable(backend, interpret)
+    elif algorithm == "hash":
+        fn = _build_hash_executable(backend, interpret)
     elif algorithm == "vertex":
         fn = _build_vertex_executable(int(shape_key[-1]))
     elif algorithm == "edge":
@@ -598,9 +636,10 @@ class TrianglePlan:
         routes here instead of the host-side enumeration in ``listing.py``).
 
         Supported on plans whose stages carry edge endpoints — the filtered
-        intersection lane and the subgraph lane (whose counts on the pruned
-        graph scatter back through ``meta["vertex_map"]``; peeled vertices
-        are in no triangle by construction).
+        intersection lane, the BFS lane (level-oriented stages carry the
+        same (src, dst) layout), and the subgraph lane (whose counts on the
+        pruned graph scatter back through ``meta["vertex_map"]``; peeled
+        vertices are in no triangle by construction).
 
         Returns:
           (n,) int64 numpy array, t[v] = number of triangles containing v.
@@ -610,7 +649,7 @@ class TrianglePlan:
             (no per-edge endpoints to attribute matches to); callers fall
             back to a filtered-intersection sidecar plan.
         """
-        if self.algorithm not in ("intersection", "subgraph") \
+        if self.algorithm not in ("intersection", "subgraph", "bfs") \
                 or self.divisor != 1 \
                 or any(st.vertex_args is None for st in self.stages):
             raise NotImplementedError(
@@ -804,6 +843,156 @@ def _plan_subgraph(g: Graph, backend: str, interpret: bool,
     return stages, 1, meta
 
 
+def _plan_hash(g, backend: str, interpret: bool, widths: Sequence[int],
+               prep_backend: str = "device",
+               shape_policy: Optional[ShapePolicy] = None,
+               ) -> Tuple[List[_Stage], int, dict]:
+    """The TRUST-style vertex-centric hashing lane (arXiv:2103.08053).
+
+    Prep reuses the filtered degree-class buckets (the candidate rows are
+    exactly the intersection lane's ``v_lists`` = N⁺(dst)), plus one extra
+    plan-wide structure: an (n, B, D) per-vertex hash table over the
+    oriented neighbor rows (``repro.kernels.hash_tc``). The count stage
+    probes each bucket's candidates against ``table[src]`` — each forward
+    edge (u, v) contributes |N⁺(v) ∩ N⁺(u)|, so every triangle is counted
+    exactly once at its degree-rank-minimum edge, same invariant as the
+    filtered intersection lane. One extra scalar sync at plan time measures
+    the maximum bucket chain length; B and D are pow2-rounded so the table
+    shape is a deterministic function of the graph's shape class.
+    """
+    buckets = _buckets_for_plan(g, "filtered", widths, prep_backend,
+                                shape_policy)
+    policy = shape_policy if shape_policy is not None else DEFAULT_SHAPE_POLICY
+    stages: List[_Stage] = []
+    meta = dict(
+        variant="filtered",
+        widths=tuple(widths),
+        prep_backend=prep_backend,
+        shape_policy=policy.key() if prep_backend == "device" else None,
+    )
+    if buckets:
+        table_width = max(b.width for b in buckets)
+        num_buckets = hash_num_buckets(table_width)
+        if prep_backend == "device":
+            dg = DeviceGraph.from_graph(g, policy)
+            nbrs = dg.padded_neighbors(table_width, oriented=True)
+        else:
+            fwd = orient_forward(g)
+            nbrs = jnp.asarray(
+                csr_to_padded_neighbors(fwd, pad_to=table_width))
+        # one scalar sync: the real max chain length, rounded to a pow2 class
+        depth = next_pow2(max(1, int(hash_table_depth(
+            nbrs, jnp.int32(num_buckets)))))
+        table = build_hash_table(nbrs, num_buckets=num_buckets, depth=depth)
+        for b in buckets:
+            shape_key = (b.e_pad, b.width, num_buckets, depth)
+            fn = get_executable("hash", backend, interpret, shape_key)
+            stages.append(_Stage(
+                executable=fn,
+                args=(b.v_lists, b.src, table),
+                shape_key=shape_key,
+            ))
+        meta.update(
+            hash_num_buckets=num_buckets,
+            hash_depth=depth,
+            table_width=table_width,
+        )
+    meta.update(
+        bucket_shapes=[s.shape_key for s in stages],
+        bucket_edges=[b.edges for b in buckets],
+        edges=int(sum(b.edges for b in buckets)),
+    )
+    return stages, 1, meta
+
+
+def _plan_bfs(g: Graph, backend: str, interpret: bool,
+              widths: Sequence[int], strategy: str = "auto",
+              bitmap_bits: Optional[int] = None,
+              shape_policy: Optional[ShapePolicy] = None,
+              ) -> Tuple[List[_Stage], int, dict]:
+    """The BFS-based lane (Fast BFS-Based Triangle Counting, arXiv:1909.02127).
+
+    A level-ordered traversal replaces the degree rank: BFS levels come from
+    the jitted ``graphs.device.bfs_levels`` fixpoint over the ``DeviceCSR``
+    (one (n,) sync at plan time), then every edge is oriented toward its
+    larger ``(level, id)`` endpoint — a total order, so each triangle closes
+    exactly once at its rank-minimum wedge. The count stage is forward-edge
+    wedge closure |N_f(u) ∩ N_f(v)| over level-oriented degree-class
+    buckets, which is byte-for-byte the intersection lane's computation —
+    the stages bind the *same cached intersection executables* (shared
+    process-wide), only the oriented rows differ. No packed pair keys ⇒ no
+    n ≲ 46k bound.
+    """
+    policy = shape_policy if shape_policy is not None else DEFAULT_SHAPE_POLICY
+    meta = dict(
+        variant="bfs-forward",
+        widths=tuple(widths),
+        strategy=strategy,
+        shape_policy=policy.key(),
+    )
+    if g.n == 0 or g.m_undirected == 0:
+        meta.update(bucket_shapes=[], bucket_strategies=[], bucket_edges=[],
+                    edges=0, levels_max=0, bfs_sources=int(g.n))
+        return [], 1, meta
+
+    dg = DeviceGraph.from_graph(g, policy)
+    lvl = np.asarray(bfs_levels(dg))  # one (n,) sync at plan time
+    src_all, dst_all = g.edge_endpoints()
+    keep = (lvl[src_all] < lvl[dst_all]) | (
+        (lvl[src_all] == lvl[dst_all]) & (src_all < dst_all))
+    fsrc = src_all[keep].astype(np.int32)
+    fdst = dst_all[keep].astype(np.int32)
+    counts = np.bincount(fsrc, minlength=g.n)
+    outdeg = counts.astype(np.int32)
+    row_ptr = np.zeros(g.n + 1, dtype=np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    # rows stay sorted by dst id because the parent CSR rows were
+    fg = Graph(n=g.n, row_ptr=row_ptr, col_idx=fdst, name=g.name + "+bfs")
+
+    id_range = g.n + 2
+    stages: List[_Stage] = []
+    bucket_edges: List[int] = []
+    for b in bucket_edges_by_degree(fsrc, fdst, outdeg, widths):
+        w = int(b["width"])
+        bs, bd = b["src"], b["dst"]
+        nbrs = csr_to_padded_neighbors(fg, pad_to=w)  # in-row sentinel n
+        u_rows = nbrs[bs]
+        v_rows = np.where(nbrs[bd] == g.n, g.n + 1, nbrs[bd])
+        e = int(bs.shape[0])
+        e_pad = policy.round_edges(e)
+        pad = e_pad - e
+        if pad:
+            u_rows = np.vstack([u_rows, np.full((pad, w), -1, np.int32)])
+            v_rows = np.vstack([v_rows, np.full((pad, w), -2, np.int32)])
+            bs = np.concatenate([bs, np.zeros(pad, np.int32)])
+            bd = np.concatenate([bd, np.zeros(pad, np.int32)])
+        shape_key = (e_pad, w)
+        strat, bits = _resolve_bucket_strategy(w, id_range, strategy,
+                                               bitmap_bits)
+        fn = get_executable("intersection", backend, interpret, shape_key,
+                            strategy=strat, bitmap_bits=bits)
+        stages.append(_Stage(
+            executable=fn,
+            args=(jnp.asarray(u_rows, dtype=jnp.int32),
+                  jnp.asarray(v_rows, dtype=jnp.int32)),
+            shape_key=shape_key,
+            strategy=strat,
+            bitmap_bits=bits,
+            vertex_args=(jnp.asarray(bs, dtype=jnp.int32),
+                         jnp.asarray(bd, dtype=jnp.int32)),
+        ))
+        bucket_edges.append(e)
+    meta.update(
+        bucket_shapes=[s.shape_key for s in stages],
+        bucket_strategies=[(s.shape_key[1], s.strategy) for s in stages],
+        bucket_edges=bucket_edges,
+        edges=int(fsrc.shape[0]),
+        levels_max=int(lvl.max(initial=0)),
+        bfs_sources=int((lvl == 0).sum()),
+    )
+    return stages, 1, meta
+
+
 def plan_triangle_count(
     g: Graph,
     algorithm: str = "intersection",
@@ -823,7 +1012,9 @@ def plan_triangle_count(
 
     Args:
       g: the input ``Graph`` (undirected simple CSR).
-      algorithm: "intersection" | "matrix" | "subgraph".
+      algorithm: "intersection" | "matrix" | "subgraph" | "hash" (the
+        TRUST-style per-vertex hashing lane) | "bfs" (level-ordered
+        wedge closure).
       backend: "jnp" | "pallas" | "ref" per-kernel execution path.
       interpret: pallas interpret mode (True runs kernel bodies on CPU);
         None (default) resolves to ``repro.core.options.DEFAULT_INTERPRET``
@@ -865,6 +1056,12 @@ def plan_triangle_count(
         stages, divisor, meta = _plan_subgraph(g, backend, interpret, widths,
                                                strategy, bitmap_bits,
                                                prep_backend, shape_policy)
+    elif algorithm == "hash":
+        stages, divisor, meta = _plan_hash(g, backend, interpret, widths,
+                                           prep_backend, shape_policy)
+    elif algorithm == "bfs":
+        stages, divisor, meta = _plan_bfs(g, backend, interpret, widths,
+                                          strategy, bitmap_bits, shape_policy)
     else:
         raise ValueError(
             f"unknown algorithm {algorithm!r}; expected one of {ALGORITHMS}"
@@ -881,6 +1078,66 @@ def plan_triangle_count(
         meta=meta,
         prep_seconds=prep_seconds,
     )
+
+
+def plan_hash_count(
+    g: Graph,
+    *,
+    backend: str = "jnp",
+    interpret: Optional[bool] = None,
+    widths: Sequence[int] = DEFAULT_WIDTHS,
+    prep_backend: str = "device",
+    shape_policy: Optional[ShapePolicy] = None,
+) -> TrianglePlan:
+    """Plan the TRUST-style vertex-centric hashing lane (see ``_plan_hash``).
+
+    Args mirror ``plan_triangle_count``'s shared subset; the lane has no
+    ``strategy`` knob — its count core is the hash probe, not the sorted
+    merge. Returns a ``TrianglePlan`` with ``algorithm="hash"``.
+    """
+    return plan_triangle_count(
+        g, "hash", backend=backend, interpret=interpret, widths=widths,
+        prep_backend=prep_backend, shape_policy=shape_policy,
+    )
+
+
+def plan_bfs_count(
+    g: Graph,
+    *,
+    backend: str = "jnp",
+    interpret: Optional[bool] = None,
+    widths: Sequence[int] = DEFAULT_WIDTHS,
+    strategy: str = "auto",
+    bitmap_bits: Optional[int] = None,
+    shape_policy: Optional[ShapePolicy] = None,
+) -> TrianglePlan:
+    """Plan the BFS-based lane (see ``_plan_bfs``).
+
+    Args mirror ``plan_triangle_count``'s shared subset; ``strategy`` /
+    ``bitmap_bits`` select the per-bucket intersection core exactly as on
+    the intersection lane (the executables are shared). Returns a
+    ``TrianglePlan`` with ``algorithm="bfs"``.
+    """
+    return plan_triangle_count(
+        g, "bfs", backend=backend, interpret=interpret, widths=widths,
+        strategy=strategy, bitmap_bits=bitmap_bits, shape_policy=shape_policy,
+    )
+
+
+def _hash_planner(g: Graph, options, *, mesh=None) -> TrianglePlan:
+    """Registry planner: CountOptions → hashing-lane TrianglePlan."""
+    return plan_hash_count(g, **options.plan_kwargs("hash"))
+
+
+register_algorithm("hash", _hash_planner)
+
+
+def _bfs_planner(g: Graph, options, *, mesh=None) -> TrianglePlan:
+    """Registry planner: CountOptions → BFS-lane TrianglePlan."""
+    return plan_bfs_count(g, **options.plan_kwargs("bfs"))
+
+
+register_algorithm("bfs", _bfs_planner)
 
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,7 @@ from repro.graphs.device import DEFAULT_SHAPE_POLICY, ShapePolicy
 
 __all__ = [
     "BACKENDS",
+    "CHOOSERS",
     "CountOptions",
     "DEFAULT_INTERPRET",
     "DEFAULT_WIDTHS",
@@ -41,6 +42,7 @@ DEFAULT_WIDTHS: Tuple[int, ...] = (8, 32, 128, 512)
 VARIANTS = ("filtered", "full")
 BACKENDS = ("jnp", "pallas", "ref")
 PREP_BACKENDS = ("device", "host")
+CHOOSERS = ("heuristic", "measured")
 
 _FALSY = ("0", "false", "no", "off", "")
 
@@ -68,8 +70,17 @@ class CountOptions:
     Attributes:
       algorithm: "auto" (cross-lane cost model, see
         ``repro.core.registry.choose_algorithm``) or a registered lane name —
-        "intersection" | "matrix" | "subgraph" | "edge" (per-edge support /
-        k-truss) | "intersection_distributed" | "matrix_distributed".
+        "intersection" | "matrix" | "subgraph" | "hash" (TRUST-style
+        vertex-centric hashing) | "bfs" (level-ordered wedge closure) |
+        "edge" (per-edge support / k-truss) | "intersection_distributed" |
+        "matrix_distributed".
+      chooser: how ``algorithm="auto"`` resolves — "heuristic" (default:
+        the hand-written shape rules on
+        ``repro.core.registry._default_chooser``) or "measured" (the
+        per-device calibration table from ``repro.core.calibrate``:
+        feature-binned lane timings, analytically seeded from executable
+        pricing when no measurement exists, falling back to the heuristic
+        on a table miss). Ignored when ``algorithm`` names a lane.
       variant: intersection lane — "filtered" (forward algorithm, each
         triangle once) or "full" (every directed edge, found 6×).
       backend: "jnp" | "pallas" | "ref" per-kernel execution path.
@@ -121,6 +132,7 @@ class CountOptions:
     """
 
     algorithm: str = "auto"
+    chooser: str = "heuristic"
     variant: str = "filtered"
     backend: str = "jnp"
     interpret: Optional[bool] = None
@@ -153,6 +165,10 @@ class CountOptions:
                     f"unknown algorithm {self.algorithm!r}; expected 'auto' "
                     f"or one of {names}"
                 )
+        if self.chooser not in CHOOSERS:
+            raise ValueError(
+                f"unknown chooser {self.chooser!r}; expected one of {CHOOSERS}"
+            )
         if self.variant not in VARIANTS:
             raise ValueError(
                 f"unknown variant {self.variant!r}; expected one of {VARIANTS}"
@@ -253,6 +269,7 @@ class CountOptions:
             self.prep_backend, self.resolved_shape_policy.key(),
             self.max_peel_iters, self.peel_early_exit,
             self.update_batch_size, self.recount_interval,
+            self.chooser,
         )
 
     def replace(self, **changes) -> "CountOptions":
@@ -295,7 +312,18 @@ class CountOptions:
                         shape_policy=self.shape_policy,
                         update_batch_size=self.update_batch_size,
                         recount_interval=self.recount_interval)
-        lanes = ("dynamic", "edge", "intersection", "matrix", "subgraph")
+        if lane == "hash":
+            return dict(backend=self.backend, interpret=self.interpret,
+                        widths=self.widths,
+                        prep_backend=self.prep_backend,
+                        shape_policy=self.shape_policy)
+        if lane == "bfs":
+            return dict(backend=self.backend, interpret=self.interpret,
+                        widths=self.widths, strategy=self.strategy,
+                        bitmap_bits=self.bitmap_bits,
+                        shape_policy=self.shape_policy)
+        lanes = ("bfs", "dynamic", "edge", "hash", "intersection", "matrix",
+                 "subgraph")
         raise ValueError(
             f"unknown engine lane {lane!r}; expected one of {lanes}"
         )

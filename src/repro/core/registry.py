@@ -9,17 +9,22 @@ entry points. Each lane registers a *planner* here —
 ``OneShotPlan`` adapter for the distributed variants) — and the facade
 (``repro.core.api.TriangleCounter``) looks lanes up by name.
 
-Builtin lanes: the three engine counting lanes ("intersection" / "matrix" /
-"subgraph"), the edge-analytics lane ("edge" — per-edge support and the
-device k-truss peel, ``repro.core.engine.TrussPlan``), and the two
-``shard_map`` distributed variants.
+Builtin lanes: the five engine counting lanes ("intersection" / "matrix" /
+"subgraph" / "hash" — TRUST-style per-vertex hash probing — / "bfs" —
+level-ordered forward-edge closure), the dynamic lane ("dynamic"), the
+edge-analytics lane ("edge" — per-edge support and the device k-truss
+peel, ``repro.core.engine.TrussPlan``), and the two ``shard_map``
+distributed variants.
 
-``choose_algorithm(g)`` is the documented ``algorithm="auto"`` cost model,
-anchored to the paper's figures and calibrated on this repo's dataset
-registry (see the rule list on ``_default_chooser``). It is overridable:
-``set_auto_chooser(fn)`` swaps the heuristic process-wide (returning the
-previous one), and the chosen lane is always surfaced in
-``CountResult.algorithm``.
+``choose_algorithm(g)`` is the documented heuristic ``algorithm="auto"``
+cost model, anchored to the paper's figures and calibrated on this repo's
+dataset registry (see the rule list on ``_default_chooser``). It is
+overridable two ways: ``set_auto_chooser(fn)`` swaps the heuristic
+process-wide (returning the previous one), and
+``CountOptions(chooser="measured")`` routes "auto" through the per-device
+calibration table in ``repro.core.calibrate`` instead (measured micro-run
+timings, analytically seeded cold start, heuristic fallback). The chosen
+lane is always surfaced in ``CountResult.algorithm``.
 """
 
 from __future__ import annotations

@@ -1,0 +1,21 @@
+from repro.kernels.hash_tc.ops import (
+    build_hash_table,
+    hash_num_buckets,
+    hash_probe_counts,
+    hash_table_depth,
+)
+from repro.kernels.hash_tc.probe import (
+    hash_probe_counts_jnp,
+    hash_probe_counts_pallas,
+)
+from repro.kernels.hash_tc.ref import hash_probe_counts_ref
+
+__all__ = [
+    "build_hash_table",
+    "hash_num_buckets",
+    "hash_probe_counts",
+    "hash_probe_counts_jnp",
+    "hash_probe_counts_pallas",
+    "hash_probe_counts_ref",
+    "hash_table_depth",
+]

@@ -1,0 +1,100 @@
+"""Per-vertex hash-table construction for the TRUST-style hashing lane.
+
+TRUST (arXiv:2103.08053) makes each warp intersect a candidate list against a
+*hash table* of the anchor vertex's oriented neighbor list instead of a sorted
+array — O(1) expected probes per candidate regardless of list width. The TPU
+analogue built here is a dense, statically shaped table:
+
+    table[v, b, d]  —  (n, B, D) int32
+
+where ``B`` (``num_buckets``, a power of two) buckets neighbor ``w`` of ``v``
+at ``b = w & (B - 1)`` and ``D`` (``depth``) is the maximum bucket occupancy
+over the whole graph, so every (vertex, bucket) chain fits without probing
+chains of dynamic length. Empty slots hold ``-1`` — a value that is never a
+probe (probes are real ids ≥ 0 or the positive sentinels n/n+1), so padding
+can never match. Both ``B`` and ``D`` are rounded to powers of two by the
+planner so same-shape graphs share compiled executables.
+
+Build cost is one O(n·W·log W) jitted pass (an argsort by bucket id per row
+plus a segmented-rank scan); it runs once per plan, like the other prep
+stages.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["build_hash_table", "hash_table_depth"]
+
+
+def _bucket_ranks(b: jnp.ndarray) -> jnp.ndarray:
+    """Per-row rank of each entry within its bucket chain.
+
+    Args:
+      b: (n, W) int32 bucket ids (invalid entries mapped to a bucket id that
+        sorts after all real ones, e.g. ``num_buckets``).
+
+    Returns:
+      (n, W) int32 — ``rank[v, j]`` = number of row-``v`` entries with the
+      same bucket id that sort before entry ``j``. Computed by a stable
+      argsort by bucket id followed by a running-maximum segment scan, so it
+      is O(W log W) per row instead of the O(W²) pairwise compare.
+    """
+    n, w = b.shape
+    idx = jnp.arange(w, dtype=jnp.int32)
+    order = jnp.argsort(b, axis=1)  # stable: ties keep original order
+    sb = jnp.take_along_axis(b, order, axis=1)
+    is_start = jnp.concatenate(
+        [jnp.ones((n, 1), bool), sb[:, 1:] != sb[:, :-1]], axis=1
+    )
+    start = jax.lax.cummax(jnp.where(is_start, idx[None, :], 0), axis=1)
+    rank_sorted = idx[None, :] - start
+    rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, w))
+    return jnp.zeros_like(b).at[rows, order].set(rank_sorted)
+
+
+@jax.jit
+def hash_table_depth(nbrs: jnp.ndarray, num_buckets: jnp.ndarray) -> jnp.ndarray:
+    """Maximum bucket occupancy over all (vertex, bucket) chains.
+
+    Args:
+      nbrs: (n, W) int32 padded oriented neighbor rows, in-row padding = n.
+      num_buckets: scalar int32 power-of-two bucket count.
+
+    Returns:
+      int32 scalar — the smallest table depth D that loses no entries. The
+      planner syncs this once and rounds it to a power of two.
+    """
+    n = nbrs.shape[0]
+    valid = nbrs < n
+    b = jnp.where(valid, nbrs & (num_buckets - 1), num_buckets)
+    rank = _bucket_ranks(b)
+    return jnp.max(jnp.where(valid, rank + 1, 0), initial=0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "depth"))
+def build_hash_table(
+    nbrs: jnp.ndarray, *, num_buckets: int, depth: int
+) -> jnp.ndarray:
+    """Scatter oriented neighbor rows into the (n, B, D) hash table.
+
+    Args:
+      nbrs: (n, W) int32 padded oriented neighbor rows (N⁺ lists, in-row
+        padding sentinel = n, rows sorted ascending).
+      num_buckets: B, a power of two; bucket(w) = ``w & (B - 1)``.
+      depth: D ≥ ``hash_table_depth(nbrs, B)``; shallower chains drop
+        entries silently (``mode="drop"``), so callers must size D first.
+
+    Returns:
+      (n, B, D) int32 table, empty slots = -1.
+    """
+    n, w = nbrs.shape
+    valid = nbrs < n
+    b = jnp.where(valid, nbrs & (num_buckets - 1), num_buckets)  # invalid → OOB
+    rank = _bucket_ranks(b)
+    rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, w))
+    table = jnp.full((n, num_buckets, depth), -1, jnp.int32)
+    return table.at[rows, b, rank].set(nbrs.astype(jnp.int32), mode="drop")

@@ -1,0 +1,148 @@
+"""Hash-probe cores for the TRUST-style hashing lane.
+
+Per forward edge (u, v) the lane counts ``|N⁺(v) ∩ N⁺(u)|`` by probing each
+element of the candidate row (``N⁺(v)``, the bucket machinery's ``v_lists``)
+against the anchor's hash table row ``table[u]`` — TRUST's warp-level
+hash-intersection, vectorized: a probe ``w`` reads bucket ``w & (B - 1)`` and
+compares against its D chain slots, so per-edge work is O(W·D) instead of the
+broadcast core's O(W²).
+
+Two implementations of the same semantics:
+
+* ``hash_probe_counts_jnp``    — gathers each edge's table row and resolves
+                                 all probes with one ``take_along_axis``;
+                                 ``lax.map``-chunked so the (C, B, D) gather
+                                 stays inside a fixed element budget.
+* ``hash_probe_counts_pallas`` — a Pallas kernel: the whole flattened table
+                                 sits in VMEM, each grid step loads a
+                                 (TE, W) probe tile and walks its rows with
+                                 ``pl.ds`` dynamic slices + an in-register
+                                 bucket gather.
+
+Probe-validity rule: only values in [0, n) probe; the candidate rows' in-row
+sentinel (n + 1) and whole-row padding (-2) are masked out, and empty table
+slots hold -1 which no valid probe can equal.
+
+VMEM budget (pallas): the table is not tiled — n·B·D·4B must fit beside the
+(TE, W) probe tile; with n=8192, B=64, D=4 that is ~8 MB. Wider tables want
+the jnp path (documented in docs/ARCHITECTURE.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["hash_probe_counts_jnp", "hash_probe_counts_pallas"]
+
+# element budget for one chunk's (C, B, D) table gather + (C, W, D) candidate
+# compare — mirrors the broadcast core's chunking constant
+_PROBE_CHUNK_ELEMS = 1 << 22
+
+
+def _probe_block(w_lists: jnp.ndarray, src: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    n, num_buckets, _ = table.shape
+    tbl = table[src]  # (C, B, D)
+    valid = (w_lists >= 0) & (w_lists < n)
+    bkt = jnp.where(valid, w_lists & (num_buckets - 1), 0)
+    cand = jnp.take_along_axis(tbl, bkt[:, :, None], axis=1)  # (C, W, D)
+    hit = jnp.any(cand == w_lists[:, :, None], axis=-1) & valid
+    return hit.sum(axis=1).astype(jnp.int32)
+
+
+@jax.jit
+def hash_probe_counts_jnp(
+    w_lists: jnp.ndarray, src: jnp.ndarray, table: jnp.ndarray
+) -> jnp.ndarray:
+    """Chunked jnp hash probe (the production CPU path).
+
+    Args:
+      w_lists: (E, W) int32 candidate rows (sorted N⁺(dst) lists, in-row
+        sentinel n + 1, whole padding rows -2).
+      src: (E,) int32 anchor vertex per row (padding rows carry 0 — harmless,
+        their probes are all invalid).
+      table: (n, B, D) int32 hash table from ``build_hash_table``; B must be
+        a power of two.
+
+    Returns:
+      (E,) int32 — per-edge count of candidates present in ``table[src]``.
+    """
+    e, w = w_lists.shape
+    if e == 0:
+        return jnp.zeros((0,), jnp.int32)
+    _, num_buckets, depth = table.shape
+    per_row = (num_buckets + w) * max(1, depth)
+    chunk = int(min(e, max(1, _PROBE_CHUNK_ELEMS // max(1, per_row))))
+    if chunk >= e:
+        return _probe_block(w_lists, src, table)
+    pad = (-e) % chunk
+    wp = jnp.pad(w_lists, ((0, pad), (0, 0)), constant_values=-2)
+    sp = jnp.pad(src, ((0, pad),), constant_values=0)
+    out = jax.lax.map(
+        lambda t: _probe_block(t[0], t[1], table),
+        (wp.reshape(-1, chunk, w), sp.reshape(-1, chunk)),
+    )
+    return out.reshape(-1)[:e]
+
+
+def _hash_probe_kernel(w_ref, src_ref, tbl_ref, out_ref, *, num_buckets: int, n: int):
+    w = w_ref[...]  # (TE, W) int32 candidate rows
+
+    def body(i, carry):
+        u = src_ref[i, 0]
+        tbl = tbl_ref[pl.ds(u * num_buckets, num_buckets), :]  # (B, D)
+        row = w[i, :]
+        valid = (row >= 0) & (row < n)
+        bkt = jnp.where(valid, row & (num_buckets - 1), 0)
+        cand = jnp.take(tbl, bkt, axis=0)  # (W, D) in-register gather
+        hit = jnp.any(cand == row[:, None], axis=-1) & valid
+        pl.store(out_ref, (pl.ds(i, 1),), hit.sum(dtype=jnp.int32)[None])
+        return carry
+
+    jax.lax.fori_loop(0, w.shape[0], body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_edges", "interpret"))
+def hash_probe_counts_pallas(
+    w_lists: jnp.ndarray,
+    src: jnp.ndarray,
+    table: jnp.ndarray,
+    *,
+    tile_edges: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas hash-probe kernel; semantics of ``hash_probe_counts_jnp``.
+
+    Args:
+      w_lists: (E, W) int32 candidate rows; E must be a multiple of
+        ``tile_edges`` (ops.py pads with sentinel rows).
+      src: (E,) int32 anchor vertices (padding rows carry 0).
+      table: (n, B, D) int32 hash table, B a power of two; resident in VMEM
+        un-tiled (see module docstring for the budget).
+      tile_edges: probe rows per grid step.
+      interpret: run the kernel body on CPU for validation; pass False on a
+        real TPU.
+
+    Returns:
+      (E,) int32 per-edge hit counts.
+    """
+    e, w = w_lists.shape
+    n, num_buckets, depth = table.shape
+    assert e % tile_edges == 0, (e, tile_edges)
+    flat = table.reshape(n * num_buckets, depth)
+    grid = (e // tile_edges,)
+    return pl.pallas_call(
+        functools.partial(_hash_probe_kernel, num_buckets=num_buckets, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_edges, w), lambda i: (i, 0)),
+            pl.BlockSpec((tile_edges, 1), lambda i: (i, 0)),
+            pl.BlockSpec((n * num_buckets, depth), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_edges,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((e,), jnp.int32),
+        interpret=interpret,
+    )(w_lists, src.reshape(e, 1), flat)

@@ -1,0 +1,37 @@
+"""Reference implementation for the hash-probe cores.
+
+``hash_probe_counts_ref`` is THE semantic oracle (what ``backend="ref"``
+dispatches to): it ignores the bucket structure entirely and compares every
+probe against every table slot, so a bucketing or ranking bug in the build
+path cannot hide in the reference. O(E·W·B·D) — tests and tiny buckets only.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["hash_probe_counts_ref"]
+
+
+def hash_probe_counts_ref(
+    w_lists: jnp.ndarray, src: jnp.ndarray, table: jnp.ndarray
+) -> jnp.ndarray:
+    """Bucket-structure-independent membership oracle.
+
+    Args:
+      w_lists: (E, W) int32 candidate rows (in-row sentinel n + 1, whole
+        padding rows -2).
+      src: (E,) int32 anchor vertex per row.
+      table: (n, B, D) int32 hash table; empty slots -1. Slot *positions*
+        are irrelevant here — only the multiset of stored ids matters, which
+        is exactly what makes this a cross-check of the build path.
+
+    Returns:
+      (E,) int32 — per-edge count of candidates stored anywhere in
+      ``table[src]``. Matches the bucketed cores because stored ids are
+      unique per row and no sentinel (-2, -1, n, n + 1) collides with a
+      stored id.
+    """
+    flat = table[src].reshape(src.shape[0], -1)  # (E, B·D)
+    eq = flat[:, :, None] == w_lists[:, None, :]
+    return eq.sum(axis=(1, 2)).astype(jnp.int32)

@@ -1,0 +1,205 @@
+"""Cross-lane dominance & calibration harness — the measured-chooser gate.
+
+The PR 7 headline: with five single-host counting lanes registered, the
+``algorithm="auto"`` story is only honest if (a) every lane is bit-exact
+against the scipy oracle on the full fixture sweep and (b) the measured
+chooser's pick is never slower than the best fixed lane beyond a stated
+tolerance. This module asserts both, plus the calibration-table mechanics
+the chooser rides on (persistence round-trip, analytic cold-start,
+heuristic fallback).
+
+Runs in its own CI job (``pytest -m sweep``) so the timing sweep never
+slows tier-1 (which runs ``-m "not sweep"``); the graphs stay smoke-sized
+so a bare ``pytest`` invocation is still safe. Set ``RUN_SLOW_TC=1`` to
+extend the sweep to the full dataset registry.
+
+Tolerance: the pick must satisfy ``t_pick <= DOMINANCE_TOL * t_best +
+DOMINANCE_SLACK_S`` against the same measured table it chose from. The
+2× multiplicative band absorbs single-core timer noise between the
+calibration micro-runs and this re-check; the 200µs additive slack keeps
+sub-millisecond fixtures (where jitter exceeds any real lane gap) from
+flaking. A pick outside that band means the chooser selected a lane the
+table itself says is materially slower — a real regression.
+"""
+
+import os
+
+import pytest
+
+from repro.core import (
+    CountOptions,
+    TriangleCounter,
+    available_algorithms,
+    choose_algorithm,
+    install_measured_chooser,
+    set_auto_chooser,
+    set_default_table,
+    triangle_count_scipy,
+)
+from repro.core import calibrate as _calibrate_fn
+from repro.core.calibrate import (
+    CHOOSER_LANES,
+    calibrate,
+    choose_measured,
+    feature_key,
+    graph_features,
+    load_table,
+    measure_lanes,
+    save_table,
+)
+from repro.graphs import available_datasets, load_dataset
+from repro.graphs.generators import complete_graph, rmat_graph
+
+pytestmark = pytest.mark.sweep
+
+assert calibrate is _calibrate_fn  # package re-export stays the module fn
+
+DOMINANCE_TOL = 2.0       # multiplicative band over the best fixed lane
+DOMINANCE_SLACK_S = 200e-6  # additive floor for sub-ms smoke fixtures
+
+
+def _sweep_graphs():
+    """The dominance fixtures: the tiny dataset registry plus two shape
+    extremes (dense clique, skewed R-MAT). RUN_SLOW_TC=1 widens to every
+    registered dataset."""
+    names = (sorted(available_datasets()) if os.environ.get("RUN_SLOW_TC")
+             else ["tiny-rmat", "tiny-grid"])
+    graphs = [load_dataset(n) for n in names]
+    graphs.append(complete_graph(32))
+    graphs.append(rmat_graph(7, 6, seed=7, name="rmat7-sweep"))
+    return graphs
+
+
+@pytest.fixture(scope="module")
+def sweep_graphs():
+    return _sweep_graphs()
+
+
+@pytest.fixture(scope="module")
+def sweep_table(sweep_graphs):
+    """One measured calibration table over the whole sweep (module-scoped:
+    every dominance assertion reads the same timings it audits)."""
+    return calibrate(sweep_graphs, iters=3, warmup=1)
+
+
+def test_all_lanes_bit_exact_on_sweep(sweep_graphs):
+    """Every chooser lane — including the new hash and bfs lanes — agrees
+    with the scipy oracle bit-exactly on every sweep fixture."""
+    for lane in CHOOSER_LANES:
+        assert lane in available_algorithms()
+    for g in sweep_graphs:
+        truth = triangle_count_scipy(g)
+        for lane in CHOOSER_LANES:
+            got = TriangleCounter(g, CountOptions(algorithm=lane)).count()
+            assert got == truth, (g.name, lane, int(got), truth)
+
+
+def test_measured_pick_dominates(sweep_graphs, sweep_table):
+    """The headline gate: on every fixture, the measured chooser's pick is
+    never slower than the best fixed lane beyond the stated tolerance,
+    judged against the very timings the table measured."""
+    for g in sweep_graphs:
+        timings = sweep_table.lookup(g)
+        assert timings and set(timings) == set(CHOOSER_LANES), g.name
+        pick = choose_measured(g, sweep_table)
+        assert pick in CHOOSER_LANES, (g.name, pick)
+        t_best = min(timings.values())
+        t_pick = timings[pick]
+        assert t_pick <= DOMINANCE_TOL * t_best + DOMINANCE_SLACK_S, (
+            f"{g.name}: auto picked {pick} at {t_pick * 1e6:.0f}us but the "
+            f"best fixed lane runs {t_best * 1e6:.0f}us "
+            f"(tol {DOMINANCE_TOL}x + {DOMINANCE_SLACK_S * 1e6:.0f}us)")
+
+
+def test_measured_pick_recheck_within_tolerance(sweep_graphs, sweep_table):
+    """Re-measure the picked lane fresh and re-apply the same band against
+    the table's best — catches a table whose timings have gone stale
+    relative to what the lane actually costs now."""
+    for g in sweep_graphs:
+        timings = sweep_table.lookup(g)
+        pick = choose_measured(g, sweep_table)
+        fresh = measure_lanes(g, [pick], iters=3, warmup=1)[pick]
+        t_best = min(timings.values())
+        assert fresh <= DOMINANCE_TOL * t_best + DOMINANCE_SLACK_S, (
+            f"{g.name}: picked lane {pick} re-measures at "
+            f"{fresh * 1e6:.0f}us vs table best {t_best * 1e6:.0f}us")
+
+
+def test_facade_auto_uses_table_and_matches_oracle(sweep_graphs,
+                                                   sweep_table):
+    """``chooser="measured"`` through the facade resolves to the table's
+    pick and still counts bit-exactly."""
+    prev = set_default_table(sweep_table)
+    try:
+        for g in sweep_graphs:
+            tc = TriangleCounter(g, CountOptions(chooser="measured"))
+            assert tc.algorithm == choose_measured(g, sweep_table), g.name
+            assert tc.count() == triangle_count_scipy(g), g.name
+    finally:
+        set_default_table(prev)
+
+
+def test_install_measured_chooser_swaps_and_restores(sweep_graphs,
+                                                     sweep_table):
+    """The registry-level hook: ``install_measured_chooser`` reroutes
+    ``choose_algorithm`` process-wide and hands back the previous chooser."""
+    g = sweep_graphs[0]
+    prev = install_measured_chooser(sweep_table)
+    try:
+        assert choose_algorithm(g) == choose_measured(g, sweep_table)
+    finally:
+        set_auto_chooser(prev)
+    assert choose_algorithm(g) in available_algorithms()
+
+
+def test_table_round_trip_preserves_choices(sweep_graphs, sweep_table,
+                                            tmp_path):
+    """Persisting and reloading the sidecar must not change a single pick."""
+    path = save_table(sweep_table, str(tmp_path / "CALIB_roundtrip.json"))
+    reloaded = load_table(path)
+    assert reloaded.entries == sweep_table.entries
+    for g in sweep_graphs:
+        assert reloaded.choose(g) == sweep_table.choose(g), g.name
+
+
+def test_analytic_cold_start_is_usable(sweep_graphs):
+    """A measure=False table (pure HLO/roofline pricing, no kernel ever
+    runs) still yields a registered, bit-exact lane for every fixture —
+    the cold-start contract."""
+    table = calibrate(sweep_graphs[:2], measure=False)
+    assert set(table.sources.values()) == {"analytic"}
+    for g in sweep_graphs:
+        pick = choose_measured(g, table)
+        assert pick in available_algorithms(), (g.name, pick)
+        got = TriangleCounter(g, CountOptions(algorithm=pick)).count()
+        assert got == triangle_count_scipy(g), (g.name, pick)
+
+
+def test_chooser_falls_back_without_table(sweep_graphs):
+    """No table installed and no sidecar on disk ⇒ the measured chooser
+    degrades to the heuristic, never an error."""
+    g = sweep_graphs[0]
+    prev = set_default_table(None)
+    env = os.environ.pop("TC_CALIB", None)
+    os.environ["TC_CALIB"] = "/nonexistent/CALIB_missing.json"
+    try:
+        assert choose_measured(g) == choose_algorithm(g)
+    finally:
+        if env is None:
+            os.environ.pop("TC_CALIB", None)
+        else:
+            os.environ["TC_CALIB"] = env
+        set_default_table(prev)
+
+
+def test_feature_bins_are_stable(sweep_graphs):
+    """Feature extraction is deterministic and every bin is well-formed —
+    the table key contract the sidecar schema relies on."""
+    for g in sweep_graphs:
+        k1 = feature_key(graph_features(g))
+        k2 = feature_key(graph_features(g))
+        assert k1 == k2
+        w, skew, dens = k1
+        assert w.startswith("w:") and int(w[2:]) >= 0
+        assert skew in ("skew:low", "skew:mid", "skew:high")
+        assert dens in ("dens:thin", "dens:sparse", "dens:dense")

@@ -4,11 +4,14 @@ PR 4 made every executed benchmark figure write a machine-readable sidecar
 (rows + env + device + argv) so the perf trajectory is comparable across
 PRs; until now only the CI bench-smoke job exercised it. This test runs the
 ``fig_truss --smoke`` sweep in-process (which also differentially asserts
-host-vs-device k-truss agreement on every row pair) plus the ``fig_stream
+host-vs-device k-truss agreement on every row pair), the ``fig_stream
 --smoke`` sweep (incremental vs full-recount parity, the zero-recompile
-contract, and the ≥3× smoke speedup gate all assert inside the sweep) and
-validates both sidecar schemas: rows non-empty and well-formed,
-env/device/argv present, no NaN cells.
+contract, and the ≥3× smoke speedup gate all assert inside the sweep), and
+the ``fig_auto --smoke`` sweep (measured-chooser calibration: every auto
+count asserts the scipy oracle inside the sweep, and the run additionally
+writes the ``CALIB_<device>.json`` calibration sidecar this test schema-
+gates alongside ``BENCH_fig_auto.json``). All sidecar schemas: rows
+non-empty and well-formed, env/device/argv present, no NaN cells.
 """
 
 import json
@@ -50,6 +53,26 @@ def fig_truss_sidecar(tmp_path_factory):
 @pytest.fixture(scope="module")
 def fig_stream_sidecar(tmp_path_factory):
     return _run_smoke_figure(tmp_path_factory, "fig_stream")
+
+
+@pytest.fixture(scope="module")
+def fig_auto_run(tmp_path_factory):
+    """The fig_auto smoke sweep: returns (BENCH sidecar dict, json_dir) —
+    the same run writes the CALIB_<device>.json calibration sidecar into
+    json_dir, which the tests below schema-gate."""
+    json_dir = tmp_path_factory.mktemp("bench_auto")
+    argv = ["run.py", "--figures", "fig_auto", "--smoke",
+            "--json-dir", str(json_dir)]
+    old_argv = sys.argv
+    sys.argv = argv
+    try:
+        runpy.run_path(str(RUN_PY), run_name="__main__")
+    finally:
+        sys.argv = old_argv
+    path = json_dir / "BENCH_fig_auto.json"
+    assert path.exists(), "fig_auto must write its sidecar"
+    with open(path, encoding="utf-8") as f:
+        return json.load(f), json_dir
 
 
 def test_sidecar_toplevel_schema(fig_truss_sidecar):
@@ -134,3 +157,78 @@ def test_stream_sidecar_pairs_incremental_and_full_recount(
         assert "speedup=" in speedup
         x = float(speedup.split("speedup=")[1].rstrip("x"))
         assert x >= 3.0
+
+
+def test_auto_sidecar_toplevel_schema(fig_auto_run):
+    data, _ = fig_auto_run
+    assert {"figure", "smoke", "argv", "env", "device", "rows"} <= set(data)
+    assert data["figure"] == "fig_auto"
+    assert data["smoke"] is True
+    assert data["argv"][:3] == ["--figures", "fig_auto", "--smoke"]
+    assert {"python", "jax", "numpy", "platform"} <= set(data["env"])
+    assert isinstance(data["device"], str) and data["device"]
+
+
+def test_auto_sidecar_rows_schema(fig_auto_run):
+    rows, _ = fig_auto_run
+    rows = rows["rows"]
+    assert rows, "fig_auto must emit rows"
+    for row in rows:
+        assert {"name", "prep_us", "count_us", "derived"} <= set(row)
+        assert row["name"].startswith("fig_auto_")
+        for cell in ("prep_us", "count_us"):
+            assert isinstance(row[cell], (int, float))
+            assert not math.isnan(row[cell]) and not math.isinf(row[cell])
+            assert row[cell] >= 0.0
+        assert isinstance(row["derived"], str) and row["derived"]
+
+
+def test_auto_sidecar_rows_pair_lanes_and_auto(fig_auto_run):
+    """Every dataset gets one row per chooser lane plus the _auto row, and
+    the _auto row's derived field carries the pick/best/ratio triple (the
+    oracle equality already asserted inside the sweep)."""
+    from repro.core.calibrate import CHOOSER_LANES
+
+    data, _ = fig_auto_run
+    rows = {r["name"]: r for r in data["rows"]}
+    autos = {n[: -len("_auto")] for n in rows if n.endswith("_auto")}
+    assert autos, "fig_auto must emit _auto rows"
+    for base in autos:
+        for lane in CHOOSER_LANES:
+            assert f"{base}_{lane}" in rows, (base, lane)
+        derived = rows[base + "_auto"]["derived"]
+        assert "auto=" in derived and "best=" in derived
+        assert "ratio=" in derived
+        pick = derived.split("auto=")[1].split(";")[0]
+        assert pick in CHOOSER_LANES, (base, pick)
+        ratio = float(derived.split("ratio=")[1])
+        assert ratio >= 1.0 and not math.isinf(ratio)
+
+
+def test_calibration_sidecar_schema(fig_auto_run):
+    """The CALIB_<device>.json sidecar the same run writes: schema version,
+    device label, and well-formed measured entries for every chooser lane —
+    and it loads back through the library with choices intact."""
+    from repro.core.calibrate import (
+        CALIB_SCHEMA_VERSION, CHOOSER_LANES, calib_path, load_table,
+    )
+
+    _, json_dir = fig_auto_run
+    path = pathlib.Path(calib_path(str(json_dir)))
+    assert path.exists(), "fig_auto must write the calibration sidecar"
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    assert doc["schema"] == CALIB_SCHEMA_VERSION
+    assert isinstance(doc["device"], str) and doc["device"]
+    assert isinstance(doc["created_unix"], (int, float))
+    assert doc["entries"], "calibration must record at least one bin"
+    for ent in doc["entries"]:
+        assert {"key", "timings", "source"} <= set(ent)
+        assert len(ent["key"]) == 3
+        assert ent["source"] in ("measured", "analytic")
+        assert set(ent["timings"]) == set(CHOOSER_LANES)
+        for lane, t in ent["timings"].items():
+            assert isinstance(t, (int, float)) and t >= 0.0
+            assert not math.isnan(t) and not math.isinf(t)
+    table = load_table(str(path))
+    assert len(table.entries) == len(doc["entries"])

@@ -1,0 +1,122 @@
+"""Executable pricing on triangle-count workloads (PR 7 satellite).
+
+``launch/hlo_cost.py`` and ``launch/roofline.py`` were written for the
+training substrate and sat unused by the counting side until the measured
+chooser (``core/calibrate.py``) adopted them as its analytic cold-start.
+That promotion makes their numbers load-bearing, so this module pins them
+three ways:
+
+* **golden-file parses** — hand-written HLO under ``tests/golden/`` with
+  arithmetic small enough to check by hand: the dot module's exact
+  flops/bytes, and the while module proving loop bodies are multiplied by
+  ``known_trip_count`` (the whole reason ``analyze_hlo`` exists).
+* **live executables** — a real intersection-lane stage is AOT-compiled
+  and priced end to end (``analyze_hlo`` on the optimized HLO, then
+  ``roofline_terms``), asserting the quantities the chooser consumes are
+  positive, finite, and collective-free on a single device.
+* **invariance** — pricing is a pure function of (graph, options):
+  ``analytic_seed`` must return bit-identical numbers for equal
+  ``CountOptions``, which is what makes cold-start choices deterministic.
+"""
+
+import math
+import pathlib
+
+import pytest
+
+from repro.core import CountOptions
+from repro.core.calibrate import (
+    CHOOSER_LANES,
+    analytic_seed,
+    price_plan,
+)
+from repro.core.registry import get_algorithm
+from repro.graphs import load_dataset
+from repro.launch.hlo_cost import HloCost, analyze_hlo
+from repro.launch.roofline import roofline_terms
+
+GOLDEN = pathlib.Path(__file__).resolve().parent / "golden"
+
+
+def _golden(name: str) -> str:
+    return (GOLDEN / name).read_text(encoding="utf-8")
+
+
+def test_golden_dot_exact_flops_and_bytes():
+    """f32[64,128] @ f32[128,32]: flops = 2·(64·32)·128, bytes = operands
+    plus output, nothing else."""
+    cost = analyze_hlo(_golden("hlo_dot.txt"))
+    assert isinstance(cost, HloCost)
+    assert cost.flops == 2.0 * (64 * 32) * 128  # 524288
+    assert cost.bytes == (64 * 128 + 128 * 32 + 64 * 32) * 4  # 57344
+    assert cost.coll_bytes == 0.0
+    assert cost.coll_by_kind == {}
+
+
+def test_golden_while_multiplies_by_trip_count():
+    """The loop-awareness contract: body+cond cost × known_trip_count=8.
+
+    Per iteration: the body add is 256 flops and 3·1024 bytes; the cond
+    compare is 1 flop and 2·1024+1 bytes (pred[] scalar out)."""
+    cost = analyze_hlo(_golden("hlo_while.txt"))
+    per_iter_flops = 256 + 1
+    per_iter_bytes = 3 * 1024 + (2 * 1024 + 1)
+    assert cost.flops == 8 * per_iter_flops
+    assert cost.bytes == 8 * per_iter_bytes
+    assert cost.coll_bytes == 0.0
+
+
+def test_golden_entry_required():
+    """No ENTRY computation ⇒ the zero cost, never a crash."""
+    cost = analyze_hlo("%orphan (x: f32[4]) -> f32[4] {\n}\n")
+    assert (cost.flops, cost.bytes, cost.coll_bytes) == (0.0, 0.0, 0.0)
+
+
+@pytest.fixture(scope="module")
+def tc_plan():
+    g = load_dataset("tiny-rmat")
+    return get_algorithm("intersection")(g, CountOptions())
+
+
+def test_live_tc_executable_prices_positive(tc_plan):
+    """A real counting stage AOT-compiles and prices to positive finite
+    flops/bytes with zero collective traffic (single device)."""
+    st = tc_plan.stages[0]
+    compiled = st.executable.lower(*st.args).compile()
+    cost = analyze_hlo(compiled.as_text())
+    assert cost.flops > 0.0 and math.isfinite(cost.flops)
+    assert cost.bytes > 0.0 and math.isfinite(cost.bytes)
+    assert cost.coll_bytes == 0.0
+
+
+def test_live_tc_roofline_terms(tc_plan):
+    """roofline_terms on the same executable: both time terms positive,
+    collective term zero, dominant named accordingly, and
+    model_flops_per_chip=0 (the chooser's setting) is safe."""
+    st = tc_plan.stages[0]
+    compiled = st.executable.lower(*st.args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    terms = roofline_terms(dict(cost or {}), compiled.as_text(),
+                           model_flops_per_chip=0.0)
+    assert terms.t_compute > 0.0 and terms.t_memory > 0.0
+    assert terms.t_collective == 0.0
+    assert terms.dominant in ("compute", "memory")
+    assert terms.useful_ratio == 0.0  # 0 model flops, guarded division
+    assert price_plan(tc_plan) > 0.0
+
+
+def test_analytic_seed_invariant_for_equal_options():
+    """Two independently constructed but equal CountOptions price every
+    lane bit-identically — the determinism the cold-start table rides on."""
+    g = load_dataset("tiny-grid")
+    a = analytic_seed(g, CHOOSER_LANES, CountOptions())
+    b = analytic_seed(g, CHOOSER_LANES, CountOptions())
+    assert set(a) == set(CHOOSER_LANES)
+    assert a == b  # bit-identical floats, not approx
+    for lane, t in a.items():
+        assert t >= 0.0 and math.isfinite(t), lane
+    # and repeat pricing of the SAME plan object is equally stable
+    plan = get_algorithm("intersection")(g, CountOptions())
+    assert price_plan(plan) == price_plan(plan)

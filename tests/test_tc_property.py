@@ -9,6 +9,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.graphs.formats import edges_to_csr, apply_permutation, orient_forward
 from repro.core import (
+    CountOptions, TriangleCounter,
     triangle_count_intersection, triangle_count_matrix,
     triangle_count_subgraph, triangle_count_scipy,
 )
@@ -34,6 +35,64 @@ def test_all_methods_agree(spec):
     assert triangle_count_intersection(g) == truth
     assert triangle_count_matrix(g, block=16) == truth
     assert triangle_count_subgraph(g) == truth
+
+
+@given(_graph_strategy(), st.sampled_from(["hash", "bfs"]))
+@settings(max_examples=40, deadline=None)
+def test_new_lanes_agree_on_random_graphs(spec, lane):
+    """PR 7 lanes: the TRUST-style hash lane and the BFS lane agree with
+    the scipy oracle on arbitrary random graphs — including the edge lists
+    ``edges_to_csr`` has to clean first (self-loops, duplicate/multi-edges,
+    both orientations of the same pair all appear in the raw lists)."""
+    n, edges = spec
+    src = np.array([e[0] for e in edges], dtype=np.int64)
+    dst = np.array([e[1] for e in edges], dtype=np.int64)
+    g = edges_to_csr(src, dst, n=n)
+    truth = triangle_count_scipy(g)
+    got = TriangleCounter(g, CountOptions(algorithm=lane)).count()
+    assert got == truth, (lane, n, int(got), truth)
+
+
+def _adversarial_graphs():
+    """Named deterministic shapes the random strategy rarely lands on."""
+    cases = {}
+    # empty: no edges at all
+    z = np.array([], dtype=np.int64)
+    cases["empty"] = edges_to_csr(z, z, n=8)
+    # self-loop-dirty: every edge doubled by loops at both endpoints
+    src = np.array([0, 1, 2, 0, 1, 2, 3, 3], dtype=np.int64)
+    dst = np.array([1, 2, 0, 0, 1, 2, 3, 0], dtype=np.int64)
+    cases["self-loop-dirty"] = edges_to_csr(src, dst, n=5)
+    # multi-edge: each triangle edge repeated 3x in both orientations
+    tri = [(0, 1), (1, 2), (2, 0), (2, 3)]
+    src = np.array([a for a, b in tri for _ in range(3)]
+                   + [b for a, b in tri for _ in range(3)], dtype=np.int64)
+    dst = np.array([b for a, b in tri for _ in range(3)]
+                   + [a for a, b in tri for _ in range(3)], dtype=np.int64)
+    cases["multi-edge"] = edges_to_csr(src, dst, n=5)
+    # star: max skew, zero triangles
+    hub = np.zeros(24, dtype=np.int64)
+    leaves = np.arange(1, 25, dtype=np.int64)
+    cases["star"] = edges_to_csr(hub, leaves, n=25)
+    # clique: max density, n-choose-3 triangles
+    k = 12
+    pairs = [(i, j) for i in range(k) for j in range(i + 1, k)]
+    cases["clique"] = edges_to_csr(
+        np.array([a for a, _ in pairs], dtype=np.int64),
+        np.array([b for _, b in pairs], dtype=np.int64), n=k)
+    return cases
+
+
+@pytest.mark.parametrize("case", sorted(_adversarial_graphs()))
+@pytest.mark.parametrize("lane", ["hash", "bfs"])
+def test_new_lanes_agree_on_adversarial_shapes(case, lane):
+    """The shapes that break naive orientations: empty graphs, self-loop
+    and multi-edge dirt, the star (max skew), and the clique (max
+    density)."""
+    g = _adversarial_graphs()[case]
+    truth = triangle_count_scipy(g)
+    got = TriangleCounter(g, CountOptions(algorithm=lane)).count()
+    assert got == truth, (case, lane, int(got), truth)
 
 
 @given(_graph_strategy(), st.integers(0, 2**31 - 1))
