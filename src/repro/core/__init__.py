@@ -37,6 +37,15 @@ Public API:
         cached per-edge support executables + the device k-truss peel loop
         (surfaced as ``TriangleCounter.edge_support`` / ``k_truss`` /
         ``truss_decomposition``)
+    cache_info / clear_caches / set_cache_limit (+ the original
+        executable_cache_info / clear_executable_cache pair) — the
+        process-wide executable cache, since PR 8 a thread-safe bounded LRU
+        (default 512 entries, ``TC_EXEC_CACHE_SIZE`` env var) with
+        hit/miss/eviction counters, shared by every session and the
+        ``repro.serve`` front end
+    graph_fingerprint — stable CSR content hash; with
+        ``CountOptions.key()`` it forms ``CounterSession.session_key()``,
+        the serving layer's session-reuse identity
     DEFAULT_INTERPRET / resolve_interpret — the single interpret-mode default
         (``TC_INTERPRET`` env var)
     enumerate_triangles — host-side triangle enumeration
@@ -67,9 +76,12 @@ from repro.core.engine import (
     GraphBatch,
     TrianglePlan,
     TrussPlan,
+    cache_info,
     choose_strategy,
+    clear_caches,
     clear_executable_cache,
     executable_cache_info,
+    set_cache_limit,
     plan_bfs_count,
     plan_dynamic_count,
     plan_edge_support,
@@ -92,6 +104,7 @@ from repro.core.api import (
     CountResult,
     DynamicTriangleCounter,
     TriangleCounter,
+    graph_fingerprint,
 )
 from repro.graphs.formats import EdgeUpdate, normalize_edge_updates
 from repro.kernels.intersect.ops import available_strategies
@@ -162,6 +175,10 @@ __all__ = [
     "resolve_strategy",
     "executable_cache_info",
     "clear_executable_cache",
+    "cache_info",
+    "clear_caches",
+    "set_cache_limit",
+    "graph_fingerprint",
     "triangle_count_intersection",
     "prepare_intersection_buckets",
     "triangle_count_matrix",

@@ -53,6 +53,7 @@ preserved, same return values, plus a ``DeprecationWarning``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 import time
 import warnings
@@ -67,7 +68,24 @@ from repro.core.options import CountOptions
 from repro.graphs.formats import Graph, normalize_edge_updates
 
 __all__ = ["CountResult", "CounterSession", "DynamicTriangleCounter",
-           "TriangleCounter", "warn_deprecated"]
+           "TriangleCounter", "graph_fingerprint", "warn_deprecated"]
+
+
+def graph_fingerprint(g: Graph) -> str:
+    """A stable content hash of a graph's CSR (32 hex chars).
+
+    Two ``Graph`` objects with identical ``(n, row_ptr, col_idx)`` — the
+    arrays every plan is built from — fingerprint identically regardless of
+    ``name`` or object identity. The serving layer keys its session and
+    prepped-plan caches on ``(graph_fingerprint(g), options.key())`` so
+    repeat requests for the same graph reuse device prep instead of
+    redoing it. Cost is one pass over the CSR (no device work).
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str(int(g.n)).encode())
+    h.update(np.ascontiguousarray(g.row_ptr, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(g.col_idx, dtype=np.int64).tobytes())
+    return h.hexdigest()
 
 
 def warn_deprecated(old: str, new: str) -> None:
@@ -232,6 +250,14 @@ class CounterSession:
         (every session shares one cache, so deltas across calls measure
         compilations caused in between)."""
         return executable_cache_info()
+
+    def session_key(self) -> tuple:
+        """The session's reuse identity: ``(graph_fingerprint(graph),
+        options.key())``. Two sessions with equal keys are interchangeable —
+        same graph content, same resolved options — which is exactly what
+        the serving layer's bounded session cache needs to hand concurrent
+        tenants a shared session instead of re-prepping per request."""
+        return (graph_fingerprint(self.graph), self.options.key())
 
 
 class TriangleCounter(CounterSession):

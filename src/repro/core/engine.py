@@ -67,7 +67,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
+import threading
 import time
+from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -182,8 +185,114 @@ def peel_to_two_core(g: Graph, labels: Optional[np.ndarray] = None,
 # Executable cache — jit-compiled device programs, shared across plans
 # ---------------------------------------------------------------------------
 
-_EXECUTABLE_CACHE: Dict[tuple, Callable] = {}
-_CACHE_STATS = {"hits": 0, "misses": 0}
+class _BoundedLRU:
+    """Thread-safe, size-bounded LRU of jitted executables.
+
+    ``get_or_build`` is the single get-or-compile gate the serving layer
+    relies on: a hit moves the key to the MRU end; a miss claims the key
+    under the lock, releases it, builds, then inserts and evicts from the
+    LRU end. Racing requests for the same key block on the claimant's event
+    and pick up the one built callable (counted as hits) — no duplicate
+    compiles. Eviction only drops the *cache reference*: live plans hold
+    direct references to their executables, so an evicted program keeps
+    working and is simply rebuilt on its next cold fetch (jit tracing is
+    lazy, so a rebuild is cheap until the shape is actually re-run).
+    """
+
+    def __init__(self, maxsize: int):
+        if maxsize < 1:
+            raise ValueError(f"cache maxsize must be >= 1, got {maxsize}")
+        self._data: "OrderedDict[tuple, Callable]" = OrderedDict()
+        self._lock = threading.RLock()
+        self._pending: Dict[tuple, threading.Event] = {}
+        self.maxsize = int(maxsize)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get_or_build(self, key: tuple, builder: Callable[[], Callable]):
+        while True:
+            with self._lock:
+                fn = self._data.get(key)
+                if fn is not None:
+                    self._data.move_to_end(key)
+                    self.hits += 1
+                    return fn
+                ev = self._pending.get(key)
+                if ev is None:
+                    self._pending[key] = threading.Event()
+                    self.misses += 1
+                    break
+            ev.wait()  # someone else is building this key; re-check
+        try:
+            fn = builder()
+        except BaseException:
+            with self._lock:
+                self._pending.pop(key).set()
+            raise
+        with self._lock:
+            self._data[key] = fn
+            self._data.move_to_end(key)
+            self._evict_locked()
+            self._pending.pop(key).set()
+        return fn
+
+    def _evict_locked(self) -> None:
+        while len(self._data) > self.maxsize:
+            self._data.popitem(last=False)
+            self.evictions += 1
+
+    def set_maxsize(self, maxsize: int) -> int:
+        if maxsize < 1:
+            raise ValueError(f"cache maxsize must be >= 1, got {maxsize}")
+        with self._lock:
+            old = self.maxsize
+            self.maxsize = int(maxsize)
+            self._evict_locked()
+            return old
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self.hits = 0
+            self.misses = 0
+            self.evictions = 0
+
+    def info(self, include_keys: bool = False) -> dict:
+        with self._lock:
+            d = dict(size=len(self._data), hits=self.hits,
+                     misses=self.misses, maxsize=self.maxsize,
+                     evictions=self.evictions)
+            if include_keys:
+                d["keys"] = tuple(self._data.keys())
+            return d
+
+    # dict-compatible read views (tests poke entries by key)
+    def __getitem__(self, key: tuple) -> Callable:
+        with self._lock:
+            return self._data[key]
+
+    def __contains__(self, key: tuple) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+
+def _env_cache_size() -> int:
+    raw = os.environ.get("TC_EXEC_CACHE_SIZE", "512")
+    try:
+        size = int(raw)
+    except ValueError as e:
+        raise ValueError(f"TC_EXEC_CACHE_SIZE={raw!r} is not an int") from e
+    if size < 1:
+        raise ValueError(f"TC_EXEC_CACHE_SIZE must be >= 1, got {size}")
+    return size
+
+
+_EXECUTABLE_CACHE = _BoundedLRU(_env_cache_size())
 
 
 def _build_intersect_executable(strategy: str, backend: str, interpret: bool,
@@ -465,41 +574,36 @@ def get_executable(algorithm: str, backend: str, interpret: bool,
       ``(algorithm, strategy, backend, interpret, bitmap_bits, shape)``
       so plans over same-shaped buckets/schedules share the compiled kernel.
     """
+    # validate BEFORE touching the cache so bad args never claim a key or
+    # skew the hit/miss counters
     if backend not in ("jnp", "pallas", "ref"):
         raise ValueError(f"unknown backend {backend!r}; "
                          f"expected 'jnp', 'pallas', or 'ref'")
+    if algorithm in ("intersection", "subgraph", "edge") \
+            and strategy not in STRATEGIES:
+        raise ValueError(f"unresolved strategy {strategy!r}; "
+                         f"expected one of {STRATEGIES}")
+    builders: Dict[str, Callable[[], Callable]] = {
+        "intersection": lambda: _build_intersect_executable(
+            strategy, backend, interpret, bitmap_bits),
+        "subgraph": lambda: _build_intersect_executable(
+            strategy, backend, interpret, bitmap_bits),
+        "matrix": lambda: _build_matrix_executable(backend, interpret),
+        "hash": lambda: _build_hash_executable(backend, interpret),
+        "vertex": lambda: _build_vertex_executable(int(shape_key[-1])),
+        "edge": lambda: _build_edge_executable(
+            strategy, bitmap_bits, tuple(shape_key)),
+        "dynamic_step": lambda: _build_dynamic_step_executable(
+            tuple(shape_key)),
+        "delta": lambda: _build_delta_executable(
+            strategy, bitmap_bits, tuple(shape_key)),
+    }
+    builder = builders.get(algorithm)
+    if builder is None:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
     key = (algorithm, strategy, backend, bool(interpret), bitmap_bits,
            tuple(shape_key))
-    fn = _EXECUTABLE_CACHE.get(key)
-    if fn is not None:
-        _CACHE_STATS["hits"] += 1
-        return fn
-    _CACHE_STATS["misses"] += 1
-    if algorithm in ("intersection", "subgraph"):
-        if strategy not in STRATEGIES:
-            raise ValueError(f"unresolved strategy {strategy!r}; "
-                             f"expected one of {STRATEGIES}")
-        fn = _build_intersect_executable(strategy, backend, interpret,
-                                         bitmap_bits)
-    elif algorithm == "matrix":
-        fn = _build_matrix_executable(backend, interpret)
-    elif algorithm == "hash":
-        fn = _build_hash_executable(backend, interpret)
-    elif algorithm == "vertex":
-        fn = _build_vertex_executable(int(shape_key[-1]))
-    elif algorithm == "edge":
-        if strategy not in STRATEGIES:
-            raise ValueError(f"unresolved strategy {strategy!r}; "
-                             f"expected one of {STRATEGIES}")
-        fn = _build_edge_executable(strategy, bitmap_bits, tuple(shape_key))
-    elif algorithm == "dynamic_step":
-        fn = _build_dynamic_step_executable(tuple(shape_key))
-    elif algorithm == "delta":
-        fn = _build_delta_executable(strategy, bitmap_bits, tuple(shape_key))
-    else:
-        raise ValueError(f"unknown algorithm {algorithm!r}")
-    _EXECUTABLE_CACHE[key] = fn
-    return fn
+    return _EXECUTABLE_CACHE.get_or_build(key, builder)
 
 
 def _build_batch_executable(specs: tuple, backend: str,
@@ -542,25 +646,52 @@ def get_batch_executable(specs: tuple, backend: str, interpret: bool,
     """
     key = ("intersection_batch", None, backend, bool(interpret), None,
            (int(batch),) + tuple(specs))
-    fn = _EXECUTABLE_CACHE.get(key)
-    if fn is not None:
-        _CACHE_STATS["hits"] += 1
-        return fn
-    _CACHE_STATS["misses"] += 1
-    fn = _build_batch_executable(tuple(specs), backend, bool(interpret))
-    _EXECUTABLE_CACHE[key] = fn
-    return fn
+    return _EXECUTABLE_CACHE.get_or_build(
+        key,
+        lambda: _build_batch_executable(tuple(specs), backend,
+                                        bool(interpret)),
+    )
 
 
 def executable_cache_info() -> dict:
-    """{'size': ..., 'hits': ..., 'misses': ...} for tests and benchmarks."""
-    return dict(size=len(_EXECUTABLE_CACHE), **_CACHE_STATS)
+    """``{'size', 'hits', 'misses', 'maxsize', 'evictions'}`` for tests and
+    benchmarks. Since PR 8 the cache is a thread-safe bounded LRU (default
+    512 entries, override via ``TC_EXEC_CACHE_SIZE`` or
+    ``set_cache_limit``), so the snapshot also reports the bound and how
+    many cold entries it has dropped."""
+    return _EXECUTABLE_CACHE.info()
 
 
 def clear_executable_cache() -> None:
     _EXECUTABLE_CACHE.clear()
-    _CACHE_STATS["hits"] = 0
-    _CACHE_STATS["misses"] = 0
+
+
+def cache_info() -> dict:
+    """``executable_cache_info()`` plus the live ``keys`` tuple (MRU last).
+
+    The introspection handle the serving metrics registry snapshots and
+    tests use instead of poking the private cache dict: each key is the
+    ``(algorithm, strategy, backend, interpret, bitmap_bits, shape)``
+    tuple documented on ``get_executable``.
+    """
+    return _EXECUTABLE_CACHE.info(include_keys=True)
+
+
+def clear_caches() -> None:
+    """Drop every cached executable and zero the hit/miss/eviction counters
+    (the public alias of ``clear_executable_cache``)."""
+    clear_executable_cache()
+
+
+def set_cache_limit(maxsize: int) -> int:
+    """Re-bound the process-wide executable cache; returns the old bound.
+
+    Shrinking evicts LRU entries immediately (counted in ``evictions``).
+    Live plans keep direct references to their executables, so eviction
+    never breaks an existing plan — it only forces a rebuild on the next
+    cold ``get_executable`` for that key.
+    """
+    return _EXECUTABLE_CACHE.set_maxsize(maxsize)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,59 @@
+"""``repro.serve`` — the concurrent triangle-counting service layer.
+
+The GraphChallenge framing of the paper's workload is repeated counting
+over streams of graphs, not one count: throughput across many inputs is
+the figure of merit. This package turns the repo's engine (nine lanes, a
+measured auto chooser, vmapped ``GraphBatch`` dispatch, dynamic sessions)
+into that serving story:
+
+    TriangleService — accepts concurrent per-tenant requests ("count",
+        "vertex", "edge_support", "k_truss", "update"), each resolved by a
+        future; see ``repro.serve.service``.
+    ServeConfig / ServeResult — the knob bag and the per-request outcome.
+    RequestShed — the typed rejection (reasons: queue-full / deadline /
+        shutdown) raised by futures the admission queue load-sheds;
+        SHED_QUEUE_FULL / SHED_DEADLINE / SHED_SHUTDOWN are the reason
+        constants.
+    AdmissionQueue — the bounded FIFO with compatible-take
+        (``repro.serve.queueing``).
+    Coalescer — compatible-request grouping into single vmapped dispatches
+        over a bounded prepped-plan cache (``repro.serve.coalescer``).
+    MetricsRegistry / LatencyStat — counters + bounded latency stats; the
+        service's ``snapshot()`` folds in the engine's executable-cache
+        counters (``repro.serve.metrics``).
+
+Benchmarked by ``benchmarks/run.py --figures fig_serve``; documented in
+``docs/ARCHITECTURE.md`` §Serving.
+"""
+
+from repro.serve.coalescer import Coalescer, PreppedGraph
+from repro.serve.metrics import LatencyStat, MetricsRegistry
+from repro.serve.queueing import (
+    SHED_DEADLINE,
+    SHED_QUEUE_FULL,
+    SHED_SHUTDOWN,
+    AdmissionQueue,
+    RequestShed,
+)
+from repro.serve.service import (
+    KINDS,
+    ServeConfig,
+    ServeResult,
+    TriangleService,
+)
+
+__all__ = [
+    "AdmissionQueue",
+    "Coalescer",
+    "KINDS",
+    "LatencyStat",
+    "MetricsRegistry",
+    "PreppedGraph",
+    "RequestShed",
+    "SHED_DEADLINE",
+    "SHED_QUEUE_FULL",
+    "SHED_SHUTDOWN",
+    "ServeConfig",
+    "ServeResult",
+    "TriangleService",
+]

@@ -10,8 +10,12 @@ contract, and the ≥3× smoke speedup gate all assert inside the sweep), and
 the ``fig_auto --smoke`` sweep (measured-chooser calibration: every auto
 count asserts the scipy oracle inside the sweep, and the run additionally
 writes the ``CALIB_<device>.json`` calibration sidecar this test schema-
-gates alongside ``BENCH_fig_auto.json``). All sidecar schemas: rows
-non-empty and well-formed, env/device/argv present, no NaN cells.
+gates alongside ``BENCH_fig_auto.json``), and the ``fig_serve --smoke``
+sweep (service-vs-sequential-facade speedup ≥2×, below-knee zero shed,
+bounded-p99 deadline shedding, and zero steady-state recompiles all
+assert inside the sweep; this test re-reads the gates from the sidecar).
+All sidecar schemas: rows non-empty and well-formed, env/device/argv
+present, no NaN cells.
 """
 
 import json
@@ -53,6 +57,11 @@ def fig_truss_sidecar(tmp_path_factory):
 @pytest.fixture(scope="module")
 def fig_stream_sidecar(tmp_path_factory):
     return _run_smoke_figure(tmp_path_factory, "fig_stream")
+
+
+@pytest.fixture(scope="module")
+def fig_serve_sidecar(tmp_path_factory):
+    return _run_smoke_figure(tmp_path_factory, "fig_serve")
 
 
 @pytest.fixture(scope="module")
@@ -157,6 +166,65 @@ def test_stream_sidecar_pairs_incremental_and_full_recount(
         assert "speedup=" in speedup
         x = float(speedup.split("speedup=")[1].rstrip("x"))
         assert x >= 3.0
+
+
+def test_serve_sidecar_toplevel_schema(fig_serve_sidecar):
+    data = fig_serve_sidecar
+    assert {"figure", "smoke", "argv", "env", "device", "rows"} <= set(data)
+    assert data["figure"] == "fig_serve"
+    assert data["smoke"] is True
+    assert data["argv"][:3] == ["--figures", "fig_serve", "--smoke"]
+    assert {"python", "jax", "numpy", "platform"} <= set(data["env"])
+    assert isinstance(data["device"], str) and data["device"]
+
+
+def test_serve_sidecar_rows_schema(fig_serve_sidecar):
+    rows = fig_serve_sidecar["rows"]
+    assert rows, "fig_serve must emit rows"
+    for row in rows:
+        assert {"name", "prep_us", "count_us", "derived"} <= set(row)
+        assert row["name"].startswith("fig_serve_")
+        for cell in ("prep_us", "count_us"):
+            assert isinstance(row[cell], (int, float))
+            assert not math.isnan(row[cell]) and not math.isinf(row[cell])
+            assert row[cell] >= 0.0
+        assert isinstance(row["derived"], str) and row["derived"]
+
+
+def test_serve_sidecar_speedup_and_shed_contract(fig_serve_sidecar):
+    """The serving acceptance gates, re-read from the sidecar: the service
+    burst beats the sequential-facade baseline by ≥2× (the in-process gate),
+    below-knee QPS rows shed nothing, the over-knee and depth-bounded rows
+    record nonzero shed rates, and steady state recompiled nothing."""
+    rows = {r["name"]: r for r in fig_serve_sidecar["rows"]}
+    seq = next((n for n in rows if n.endswith("_sequential")), None)
+    batch = next((n for n in rows if n.endswith("_service-batch")), None)
+    steady = next((n for n in rows if n.endswith("_steady-state")), None)
+    assert seq and batch and steady
+    assert "throughput=" in rows[seq]["derived"]
+    x = float(rows[batch]["derived"].split("speedup=")[1].rstrip("x"))
+    assert x >= 2.0
+    coalesce = float(
+        rows[batch]["derived"].split("coalesce=")[1].split(";")[0])
+    assert coalesce > 1.0
+
+    qps = {n: r for n, r in rows.items() if "_qps" in n}
+    assert len(qps) >= 3  # below knee, over knee, depth-bounded burst
+    shed_rates = {}
+    for name, row in qps.items():
+        derived = row["derived"]
+        for field in ("p50_ms=", "p99_ms=", "throughput=", "shed_rate="):
+            assert field in derived, (name, field)
+        shed_rates[name] = float(
+            derived.split("shed_rate=")[1].split(";")[0])
+    assert min(shed_rates.values()) == 0.0  # below the knee: no shedding
+    assert max(shed_rates.values()) > 0.0   # above it: typed load-shedding
+    over_knee = [n for n, r in shed_rates.items() if r > 0.0]
+    assert any("deadline_ms=" in rows[n]["derived"] or "depth=" in
+               rows[n]["derived"] for n in over_knee)
+
+    assert "recompiles=0" in rows[steady]["derived"]
+    assert "plan_cache_hits=" in rows[steady]["derived"]
 
 
 def test_auto_sidecar_toplevel_schema(fig_auto_run):

@@ -251,7 +251,9 @@ def test_sessions_share_the_counter_session_surface():
         assert c == 10
         assert stats["algorithm"] == sess.algorithm
         cs = sess.cache_stats()
-        assert set(cs) == {"size", "hits", "misses"}
+        # the bounded LRU (PR 8) added maxsize/evictions to the snapshot
+        assert set(cs) == {"size", "hits", "misses", "maxsize",
+                           "evictions"}
     assert tc.cache_stats() == executable_cache_info()
 
 

@@ -200,3 +200,112 @@ def test_fig5_matrix_matches_oracle(name):
         pytest.skip("dense tile schedule exceeds tier-1 budget; RUN_SLOW_TC=1")
     g, truth = _dataset(name)
     assert plan_triangle_count(g, "matrix", block="auto").count() == truth
+
+
+# --- the bounded, thread-safe executable cache (PR 8) ------------------------
+
+
+def test_cache_info_and_clear_caches_helpers():
+    """The public introspection pair: cache_info() = counters + live keys
+    (so tests stop poking the private dict), clear_caches() resets both."""
+    from repro.core import cache_info, clear_caches
+
+    g = rmat_graph(8, 6, seed=41)
+    plan = plan_triangle_count(g, "intersection")
+    info = cache_info()
+    assert {"size", "hits", "misses", "maxsize", "evictions",
+            "keys"} <= set(info)
+    assert info["size"] == len(info["keys"])
+    for st in plan.stages:  # every stage's key is visible in the snapshot
+        key = ("intersection", st.strategy, "jnp", True, st.bitmap_bits,
+               st.shape_key)
+        assert key in info["keys"]
+    # executable_cache_info is the same counters minus the keys
+    assert executable_cache_info() == {k: v for k, v in cache_info().items()
+                                       if k != "keys"}
+    clear_caches()
+    info = cache_info()
+    assert info["size"] == info["hits"] == info["misses"] == 0
+    assert info["evictions"] == 0
+    assert plan.count() == triangle_count_scipy(g)  # live plans survive
+
+
+def test_set_cache_limit_bounds_and_evicts_lru():
+    from repro.core import cache_info, clear_caches, set_cache_limit
+
+    clear_caches()
+    g = rmat_graph(8, 6, seed=42)
+    plan = plan_triangle_count(g, "intersection")
+    assert plan.num_stages >= 2
+    truth = triangle_count_scipy(g)
+    size = cache_info()["size"]
+    old = set_cache_limit(1)
+    try:
+        info = cache_info()
+        assert info["maxsize"] == 1
+        assert info["size"] == 1  # shrunk immediately...
+        assert info["evictions"] == size - 1  # ...evicting LRU entries
+        # the evicted stages still run (plans hold direct references) and
+        # a re-fetch rebuilds them as cache misses, not errors
+        assert plan.count() == truth
+        before = cache_info()["misses"]
+        plan2 = plan_triangle_count(g, "intersection")
+        assert plan2.count() == truth
+        assert cache_info()["misses"] > before  # bound forced recompiles
+        with pytest.raises(ValueError, match="maxsize"):
+            set_cache_limit(0)
+    finally:
+        assert set_cache_limit(old) == 1
+    clear_caches()
+
+
+def test_racing_same_key_requests_compile_once():
+    """The get-or-compile lock: N threads racing one cold key produce ONE
+    miss and all receive the identical executable object."""
+    import threading
+
+    from repro.core import clear_caches
+
+    clear_caches()
+    shape = (64, 32)
+    barrier = threading.Barrier(8)
+    got, errors = [], []
+
+    def fetch():
+        try:
+            barrier.wait(timeout=30)
+            fn = engine.get_executable("intersection", "jnp", True, shape,
+                                       strategy="probe")
+            got.append(fn)
+        except BaseException as e:  # pragma: no cover - surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=fetch) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+    assert not errors, errors
+    assert len(got) == 8
+    assert all(fn is got[0] for fn in got)
+    info = executable_cache_info()
+    assert info["misses"] == 1
+    assert info["hits"] == 7
+    clear_caches()
+
+
+def test_builder_failure_releases_the_pending_claim():
+    """A builder that raises must not wedge later requests for the key."""
+    from repro.core import clear_caches
+
+    clear_caches()
+    with pytest.raises(ValueError, match="unresolved strategy"):
+        engine.get_executable("intersection", "jnp", True, (8, 8),
+                              strategy="nope")
+    key = ("k", "broken")
+    with pytest.raises(RuntimeError, match="boom"):
+        engine._EXECUTABLE_CACHE.get_or_build(
+            key, lambda: (_ for _ in ()).throw(RuntimeError("boom")))
+    # the key is claimable again, not deadlocked on the failed attempt
+    assert engine._EXECUTABLE_CACHE.get_or_build(key, lambda: "ok") == "ok"
+    clear_caches()

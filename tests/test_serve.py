@@ -1,0 +1,328 @@
+"""repro.serve: admission/shedding contracts, coalescer edge cases,
+determinism against the sequential facade, and the zero-steady-state-
+recompile warmup guarantee."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CountOptions,
+    TriangleCounter,
+    clear_caches,
+    executable_cache_info,
+    triangle_count_scipy,
+)
+from repro.core.api import DynamicTriangleCounter
+from repro.graphs import rmat_graph
+from repro.serve import (
+    SHED_DEADLINE,
+    SHED_QUEUE_FULL,
+    SHED_SHUTDOWN,
+    Coalescer,
+    RequestShed,
+    ServeConfig,
+    ServeResult,
+    TriangleService,
+)
+from repro.serve.coalescer import _pow2_chunks
+from repro.serve.metrics import quantile
+
+POOL = [rmat_graph(6, 6, seed=510 + i, name=f"serve-t{i}") for i in range(4)]
+ORACLE = [triangle_count_scipy(g) for g in POOL]
+OPTS = CountOptions(algorithm="intersection")
+
+# a generous window so quick back-to-back submits land in one group even
+# on a slow CI box; tests that need NO coalescing use window 0 instead
+WIDE = ServeConfig(batch_window_ms=250.0, max_batch=8)
+
+
+def _svc(config=WIDE, options=OPTS, **overrides):
+    return TriangleService(options, config=config, **overrides)
+
+
+# --- unit pieces -------------------------------------------------------------
+
+
+def test_pow2_chunk_decomposition():
+    assert _pow2_chunks(1) == [1]
+    assert _pow2_chunks(7) == [4, 2, 1]
+    assert _pow2_chunks(8) == [8]
+    for k in range(1, 33):
+        assert sum(_pow2_chunks(k)) == k
+        assert all(c & (c - 1) == 0 for c in _pow2_chunks(k))
+
+
+def test_nearest_rank_quantile():
+    vals = sorted(float(v) for v in range(1, 101))
+    assert quantile(vals, 0.50) == 50.0
+    assert quantile(vals, 0.99) == 99.0
+    assert quantile([7.0], 0.99) == 7.0
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        ServeConfig(max_queue_depth=0)
+    with pytest.raises(ValueError, match="batch_window_ms"):
+        ServeConfig(batch_window_ms=-1.0)
+    with pytest.raises(ValueError, match="max_batch"):
+        ServeConfig(max_batch=0)
+    with pytest.raises(ValueError, match="default_deadline_ms"):
+        ServeConfig(default_deadline_ms=0.0)
+
+
+def test_submit_validation():
+    svc = _svc()  # not started: validation happens before the queue
+    with pytest.raises(ValueError, match="unknown kind"):
+        svc.submit("frobnicate", POOL[0])
+    with pytest.raises(ValueError, match="need a graph"):
+        svc.submit("count")
+    with pytest.raises(ValueError, match="k_truss requests need k="):
+        svc.submit("k_truss", POOL[0])
+    with pytest.raises(KeyError, match="unknown dynamic session"):
+        svc.submit("update", handle="nope", updates=[(0, 1)])
+    with pytest.raises(ValueError, match="not a graph"):
+        svc.submit("update", POOL[0], handle="nope", updates=[(0, 1)])
+
+
+# --- coalescing edge cases ---------------------------------------------------
+
+
+def test_single_request_passes_through_with_batch_size_one():
+    """A lone request flushes when the window times out and is served by
+    the single-graph path (batch_size 1), not a padded batch."""
+    with _svc(ServeConfig(batch_window_ms=20.0, max_batch=8)) as svc:
+        res = svc.count(POOL[0])
+    assert isinstance(res, ServeResult)
+    assert res.count == ORACLE[0]
+    assert res.batch_size == 1
+    assert int(res) == ORACLE[0]
+
+
+def test_compatible_burst_coalesces():
+    with _svc() as svc:
+        svc.warmup(POOL)
+        futs = [svc.submit("count", POOL[i % 4], tenant=f"t{i % 2}")
+                for i in range(8)]
+        results = [f.result(timeout=120) for f in futs]
+    for i, r in enumerate(results):
+        assert r.count == ORACLE[i % 4]
+    # the wide window must have merged at least one pair; a full merge
+    # shows up as one shared batch_id over all eight
+    assert max(r.batch_size for r in results) >= 2
+    snap = svc.snapshot()
+    assert snap["coalesce_factor"] > 1.0
+    assert snap["counters"]["completed"] == 8
+
+
+def test_incompatible_options_never_merge():
+    """Different resolved CountOptions.key() => different compat keys:
+    the groups dispatch separately (disjoint batch_ids) even when both
+    are in flight inside one window."""
+    a = OPTS
+    b = OPTS.replace(strategy="probe")  # key() differs, still batchable
+    assert a.key() != b.key()
+    with _svc() as svc:
+        futs_a = [svc.submit("count", POOL[0], options=a) for _ in range(3)]
+        futs_b = [svc.submit("count", POOL[0], options=b) for _ in range(3)]
+        res_a = [f.result(timeout=120) for f in futs_a]
+        res_b = [f.result(timeout=120) for f in futs_b]
+    assert all(r.count == ORACLE[0] for r in res_a + res_b)
+    assert {r.batch_id for r in res_a}.isdisjoint(r.batch_id for r in res_b)
+
+
+def test_auto_options_not_merged_with_explicit():
+    """algorithm="auto" resolving to the intersection lane still has a
+    different options key than an explicit "intersection" request — the
+    conservative compat rule keeps them apart."""
+    auto = CountOptions(algorithm="auto")
+    with _svc() as svc:
+        fa = svc.submit("count", POOL[1], options=auto)
+        fe = svc.submit("count", POOL[1], options=OPTS)
+        ra, re = fa.result(timeout=120), fe.result(timeout=120)
+    assert ra.count == re.count == ORACLE[1]
+    assert ra.batch_id != re.batch_id
+
+
+def test_dynamic_updates_bypass_coalescing_and_stay_fifo():
+    oracle = DynamicTriangleCounter(POOL[2], CountOptions(algorithm="dynamic"))
+    batches = [[(0, 1), (1, 2), (0, 2)], [(3, 4), (4, 5), (3, 5)]]
+    expected = [int(oracle.apply_updates(b)) for b in batches]
+    with _svc() as svc:
+        handle = svc.open_dynamic_session(POOL[2], tenant="dyn")
+        # interleave with coalescible counts: the update must not be
+        # folded into their batch
+        cfut = svc.submit("count", POOL[2])
+        ufuts = [svc.submit("update", handle=handle, updates=b)
+                 for b in batches]
+        got = [f.result(timeout=120) for f in ufuts]
+        assert cfut.result(timeout=120).count == ORACLE[2]
+        svc.close_dynamic_session(handle)
+        with pytest.raises(KeyError):
+            svc.submit("update", handle=handle, updates=[(0, 1)])
+    assert [r.count for r in got] == expected
+    assert all(r.batch_size == 1 and r.algorithm == "dynamic" for r in got)
+
+
+def test_results_bit_identical_to_sequential_facade():
+    """Coalesced (padded, vmapped, possibly heterogeneous-width) dispatch
+    must agree exactly with one facade count per request."""
+    graphs = [rmat_graph(6, e, seed=550 + e, name=f"het{e}")
+              for e in (4, 8, 12, 16)]
+    facade = [int(TriangleCounter(g, OPTS).count()) for g in graphs]
+    with _svc() as svc:
+        svc.warmup(graphs)
+        futs = [svc.submit("count", graphs[i % 4]) for i in range(12)]
+        results = [f.result(timeout=120) for f in futs]
+    assert [r.count for r in results] == [facade[i % 4] for i in range(12)]
+
+
+def test_analysis_kinds_match_facade():
+    g = POOL[3]
+    session = TriangleCounter(g, OPTS)
+    with _svc() as svc:
+        v = svc.submit("vertex", g).result(timeout=120).value
+        src, dst, sup = svc.submit("edge_support", g).result(timeout=120).value
+        kt = svc.submit("k_truss", g, k=3).result(timeout=120).value
+    np.testing.assert_array_equal(v, session.triangles_per_vertex())
+    f_src, f_dst, f_sup = session.edge_support()
+    np.testing.assert_array_equal(src, f_src)
+    np.testing.assert_array_equal(dst, f_dst)
+    np.testing.assert_array_equal(sup, f_sup)
+    assert kt.n == session.k_truss(3).n
+    snap = svc.snapshot()
+    assert snap["session_cache"]["hits"] >= 2  # one prep served all three
+
+
+# --- admission control / shedding -------------------------------------------
+
+
+def test_queue_full_sheds_with_reason():
+    svc = _svc(ServeConfig(max_queue_depth=2, batch_window_ms=0.0))
+    # dispatcher not started: the queue fills deterministically
+    f1 = svc.submit("count", POOL[0])
+    f2 = svc.submit("count", POOL[1])
+    f3 = svc.submit("count", POOL[2])
+    with pytest.raises(RequestShed) as ei:
+        f3.result(timeout=5)
+    assert ei.value.reason == SHED_QUEUE_FULL
+    svc.stop(drain=False)  # sheds the backlog instead of serving it
+    for f in (f1, f2):
+        with pytest.raises(RequestShed) as ei:
+            f.result(timeout=5)
+        assert ei.value.reason == SHED_SHUTDOWN
+    snap = svc.snapshot()
+    assert snap["counters"]["shed"] == 3
+    assert snap["counters"]["shed_queue-full"] == 1
+    assert snap["counters"]["shed_shutdown"] == 2
+    # a closed service refuses new work with "shutdown", it never hangs
+    with pytest.raises(RequestShed) as ei:
+        svc.submit("count", POOL[0]).result(timeout=5)
+    assert ei.value.reason == SHED_SHUTDOWN
+
+
+def test_expired_deadline_sheds_not_executes():
+    with _svc() as svc:
+        with pytest.raises(RequestShed) as ei:
+            svc.submit("count", POOL[0], deadline_ms=1e-4).result(timeout=30)
+    assert ei.value.reason == SHED_DEADLINE
+    assert svc.snapshot()["counters"]["shed_deadline"] == 1
+
+
+def test_default_deadline_applies_to_all_requests():
+    cfg = ServeConfig(batch_window_ms=0.0, default_deadline_ms=1e-4)
+    with _svc(cfg) as svc:
+        with pytest.raises(RequestShed) as ei:
+            svc.submit("count", POOL[0]).result(timeout=30)
+    assert ei.value.reason == SHED_DEADLINE
+
+
+def test_stop_with_drain_serves_the_backlog():
+    svc = _svc(ServeConfig(batch_window_ms=0.0, max_batch=8))
+    futs = [svc.submit("count", POOL[i % 4]) for i in range(6)]
+    svc.start()
+    svc.stop(drain=True)
+    results = [f.result(timeout=120) for f in futs]
+    assert [r.count for r in results] == [ORACLE[i % 4] for i in range(6)]
+
+
+# --- shared caches / metrics -------------------------------------------------
+
+
+def test_metrics_snapshot_schema():
+    with _svc() as svc:
+        svc.count(POOL[0])
+        snap = svc.snapshot()
+    assert {"counters", "latency", "coalesce_factor", "engine_cache",
+            "plan_cache", "session_cache", "queue_depth"} <= set(snap)
+    for name in ("queue_wait", "exec", "total"):
+        stat = snap["latency"][name]
+        assert {"count", "mean_ms", "p50_ms", "p90_ms", "p99_ms",
+                "max_ms"} <= set(stat)
+        assert stat["count"] == 1
+    assert {"size", "hits", "misses", "maxsize",
+            "evictions"} <= set(snap["engine_cache"])
+    c = snap["counters"]
+    assert c["offered"] == c["accepted"] == c["completed"] == 1
+    assert c["dispatches"] == c["dispatched_requests"] == 1
+
+
+def test_warmup_then_zero_steady_state_recompiles():
+    """The acceptance contract: after warmup over the request pool, a
+    mixed serving phase — every pow-2 batch size plus singles — compiles
+    nothing new (engine-cache miss delta is exactly zero)."""
+    clear_caches()
+    with _svc() as svc:
+        info = svc.warmup(POOL)
+        assert info["batchable"] == len(POOL)
+        misses0 = executable_cache_info()["misses"]
+        for burst in (1, 2, 3, 8):  # 3 exercises the 2+1 chunk split
+            futs = [svc.submit("count", POOL[i % 4]) for i in range(burst)]
+            for i, f in enumerate(futs):
+                assert f.result(timeout=120).count == ORACLE[i % 4]
+        assert executable_cache_info()["misses"] == misses0
+        # a second service inherits the process-wide engine cache: its
+        # own warmup over the same pool also compiles nothing
+        with _svc() as svc2:
+            svc2.warmup(POOL)
+            assert svc2.count(POOL[1]).count == ORACLE[1]
+        assert executable_cache_info()["misses"] == misses0
+
+
+def test_racing_submissions_share_one_plan_prep():
+    """Concurrent same-graph requests from many threads hit the bounded
+    plan cache: one prep miss per (graph, options), the rest hits."""
+    with _svc() as svc:
+        svc.warmup([POOL[0]])
+        base = svc.snapshot()["plan_cache"]["misses"]
+        barrier = threading.Barrier(6)
+        futs, errs = [], []
+
+        def fire():
+            try:
+                barrier.wait(timeout=30)
+                futs.append(svc.submit("count", POOL[0]))
+            except BaseException as e:  # pragma: no cover
+                errs.append(e)
+
+        threads = [threading.Thread(target=fire) for _ in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(30)
+        assert not errs
+        assert [f.result(timeout=120).count for f in futs] == [ORACLE[0]] * 6
+        assert svc.snapshot()["plan_cache"]["misses"] == base
+
+
+def test_coalescer_plan_cache_is_bounded():
+    coal = Coalescer(plan_cache_size=2)
+    from repro.core.api import graph_fingerprint
+    for g in POOL[:3]:
+        coal.prep(g, graph_fingerprint(g), OPTS)
+    info = coal.cache_info()
+    assert info["size"] == 2
+    assert info["maxsize"] == 2
+    assert info["evictions"] == 1
