@@ -56,6 +56,19 @@ Prints ``name,prep_us,count_us,derived`` CSV rows:
                the scipy oracle; derived records update throughput and the
                recount/incremental speedup (gated ≥3× in smoke).
 
+  fig_dist_*  — beyond-paper: the sharded plan/execute engine — run in a
+               SUBPROCESS with ``--xla_force_host_platform_device_count=8``
+               so the deal is real (the parent keeps its single device). Per
+               graph: the warm single-device intersection plan, the
+               pre-engine one-shot ``shard_map`` lane reconstructed honestly
+               (full prep + a fresh jitted closure on every call, nothing
+               cached), and the warm planned ``intersection_distributed`` /
+               ``matrix_distributed`` lanes. Every row asserts the scipy
+               oracle; the planned rows assert ZERO executable-cache misses
+               across the timed replays and record the measured speedup
+               over the one-shot baseline (smoke gate: planned beats
+               one-shot) plus the per-shard dealt work.
+
   fig_serve_* — beyond-paper: the ``repro.serve`` front end under load — a
                multi-tenant pool of same-policy R-MAT graphs played through
                ``TriangleService`` as (a) the sequential per-request facade
@@ -94,6 +107,8 @@ import argparse
 import json
 import os
 import platform
+import re
+import subprocess
 import sys
 import time
 
@@ -755,13 +770,140 @@ def fig_serve(*, pool_size: int = 8, scale: int = 7, edge_factor: int = 6,
           f"shed={snap['counters'].get('shed', 0)}")
 
 
+# Runs under forced host devices in a subprocess (jax locks the device count
+# at first init, so the parent cannot shard itself). argv: ndev scale
+# edge_factor iters. Prints one ``ROWS:<json>`` line.
+_DIST_SCRIPT = r"""
+import os, sys
+ndev, scale, ef, iters = (int(a) for a in sys.argv[1:5])
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=%d" % ndev)
+import json, time
+import jax
+from repro.graphs.generators import rmat_graph
+from repro.launch.mesh import make_mesh
+from repro.core import triangle_count_scipy
+from repro.core import engine
+from repro.core.engine import plan_triangle_count, executable_cache_info
+from repro.graphs.device import ShardedDeviceCSR
+
+assert jax.device_count() == ndev, jax.device_count()
+g = rmat_graph(scale, ef, seed=11, name="dist%d" % scale)
+want = int(triangle_count_scipy(g))
+mesh = make_mesh((ndev,), ("data",))
+rows = []
+
+
+def best(fn):
+    b = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        b = min(b, time.perf_counter() - t0)
+    return b * 1e6
+
+
+# single-device reference: the warm planned intersection lane
+t0 = time.perf_counter()
+p1 = plan_triangle_count(g, "intersection")
+assert p1.count() == want
+prep1 = (time.perf_counter() - t0) * 1e6
+rows.append(dict(name="rmat%d_single" % scale, prep_us=prep1,
+                 count_us=best(p1.count), derived="devices=1;oracle=ok"))
+
+
+# the pre-engine one-shot shard_map lane, reconstructed honestly: full
+# prep, the deal, and a FRESH jitted closure on EVERY call — nothing
+# shared with the executable cache (what core/distributed.py did before
+# the planned lanes)
+def one_shot():
+    sh = ShardedDeviceCSR.from_graph(g, mesh)
+    total = 0
+    for b in sh.buckets:
+        strat, bits = engine._resolve_bucket_strategy(
+            b.width, g.n + 2, "auto", None)
+        fn = engine._build_dist_intersect_executable(
+            strat, bits, b.shape + (b.chunk,), mesh)
+        total += int(fn(b.u_lists, b.v_lists, b.valid))
+    return total
+
+
+us_os = float("inf")
+for _ in range(max(2, iters)):  # every call pays prep + trace + compile
+    t0 = time.perf_counter()
+    assert one_shot() == want
+    us_os = min(us_os, (time.perf_counter() - t0) * 1e6)
+rows.append(dict(name="rmat%d_oneshot%d" % (scale, ndev), prep_us=0.0,
+                 count_us=us_os,
+                 derived="devices=%d;oracle=ok;cached=no" % ndev))
+
+# the planned distributed lanes: prep once, cached per-shard executables,
+# zero recompiles across the timed replays
+for lane, tag in (("intersection_distributed", "planned"),
+                  ("matrix_distributed", "matrix")):
+    t0 = time.perf_counter()
+    p = plan_triangle_count(g, lane, mesh=mesh)
+    assert p.count() == want
+    prep_us = (time.perf_counter() - t0) * 1e6
+    m0 = executable_cache_info()["misses"]
+    us = best(p.count)
+    rec = executable_cache_info()["misses"] - m0
+    assert rec == 0, (lane, rec)
+    work = p.meta["shard_work"]
+    balance = max(work) / max(min(work), 1)
+    rows.append(dict(
+        name="rmat%d_%s%d" % (scale, tag, ndev), prep_us=prep_us,
+        count_us=us,
+        derived="devices=%d;oracle=ok;recompiles=%d;speedup=%.2fx;"
+                "balance=%.2f" % (ndev, rec, us_os / us, balance)))
+
+print("ROWS:" + json.dumps(rows), flush=True)
+"""
+
+
+def fig_dist(*, ndev: int = 8, scale: int = 8, edge_factor: int = 8,
+             iters: int = 3, min_speedup: float = 0.0) -> None:
+    """Single device vs ``ndev`` forced host devices (see ``_DIST_SCRIPT``).
+
+    The subprocess asserts every row against the scipy oracle and asserts
+    zero recompiles across the planned lanes' timed replays; the parent
+    re-emits its rows and gates the planned-vs-one-shot speedup at
+    ``min_speedup`` when non-zero.
+    """
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # the script forces its own device count
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _DIST_SCRIPT, str(ndev), str(scale),
+         str(edge_factor), str(iters)],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    lines = [l for l in proc.stdout.splitlines() if l.startswith("ROWS:")]
+    assert lines, proc.stdout
+    speedup = None
+    for r in json.loads(lines[0][len("ROWS:"):]):
+        assert "oracle=ok" in r["derived"], r
+        _emit("fig_dist_" + r["name"], r["prep_us"], r["count_us"],
+              r["derived"])
+        m = re.search(r"speedup=([0-9.]+)x", r["derived"])
+        if m and f"_planned{ndev}" in r["name"]:
+            speedup = float(m.group(1))
+    assert speedup is not None, "planned row missing from subprocess output"
+    if min_speedup:
+        assert speedup >= min_speedup, \
+            f"fig_dist planned lane {speedup:.2f}x one-shot is below the " \
+            f"{min_speedup}x gate"
+
+
 _SMOKE_DATASETS = ["tiny-rmat", "tiny-grid"]
 _SMOKE_SCALES = [7, 8]
 _BATCH_SIZES = (2, 4, 8, 16)
 _SMOKE_BATCH_SIZES = (4, 8)
 
 _FIGURES = ("table1", "fig5", "fig6", "strat", "fig_batch", "fig_truss",
-            "fig_stream", "fig_auto", "fig_serve")
+            "fig_stream", "fig_auto", "fig_serve", "fig_dist")
 
 
 def _parse_figures(spec: str):
@@ -831,6 +973,11 @@ def main() -> None:
         else:
             fig_serve(pool_size=12, requests=96, sweep_requests=48,
                       burst_requests=96)
+    if "fig_dist" in figures:
+        if args.smoke:
+            fig_dist(scale=8, edge_factor=8, iters=2, min_speedup=1.0)
+        else:
+            fig_dist(scale=10, edge_factor=16, iters=3, min_speedup=1.0)
     _write_json(figures, args.json_dir, args.smoke)
 
 

@@ -71,6 +71,7 @@ from repro.core.registry import (
     set_auto_chooser,
 )
 from repro.core.engine import (
+    DISTRIBUTED_ALGORITHMS,
     STRATEGIES,
     DynamicPlan,
     GraphBatch,
@@ -81,6 +82,7 @@ from repro.core.engine import (
     clear_caches,
     clear_executable_cache,
     executable_cache_info,
+    mesh_cache_component,
     set_cache_limit,
     plan_bfs_count,
     plan_dynamic_count,
@@ -155,6 +157,7 @@ __all__ = [
     "available_strategies",
     "choose_algorithm",
     "set_auto_chooser",
+    "DISTRIBUTED_ALGORITHMS",
     "STRATEGIES",
     "GraphBatch",
     "TrianglePlan",
@@ -177,6 +180,7 @@ __all__ = [
     "clear_executable_cache",
     "cache_info",
     "clear_caches",
+    "mesh_cache_component",
     "set_cache_limit",
     "graph_fingerprint",
     "triangle_count_intersection",

@@ -201,11 +201,13 @@ class CounterSession:
     def _choose_auto(self, g: Graph) -> str:
         """Resolve ``algorithm="auto"`` per ``options.chooser``: "measured"
         consults the calibration table (``core.calibrate``, heuristic
-        fallback built in), "heuristic" keeps the registry's shape rules."""
+        fallback built in), "heuristic" keeps the registry's shape rules.
+        Either way the session's mesh rides along, so a multi-device session
+        promotes the pick to the matching distributed lane."""
         if self.options.chooser == "measured":
             from repro.core.calibrate import choose_measured
-            return choose_measured(g)
-        return registry.choose_algorithm(g)
+            return choose_measured(g, mesh=self.mesh)
+        return registry.choose_algorithm(g, mesh=self.mesh)
 
     @property
     def plan(self):

@@ -83,9 +83,10 @@ __all__ = [
 
 CALIB_SCHEMA_VERSION = 1
 
-# The single-host counting lanes the measured chooser ranks. Distributed
-# lanes stay opt-in by name (they need an explicit mesh), matching the
-# heuristic chooser's contract.
+# The single-host counting lanes the measured chooser ranks. With a
+# multi-device mesh the ranked pick is promoted to its distributed
+# counterpart afterwards (``registry._promote_distributed``) — the table
+# ranks formulations, not shardings, so its schema stays mesh-free.
 CHOOSER_LANES = ("intersection", "matrix", "subgraph", "hash", "bfs")
 
 # feature-bin thresholds — shared with the heuristic rules they replace
@@ -404,19 +405,25 @@ def get_default_table() -> Optional[CalibrationTable]:
     return _DEFAULT_TABLE
 
 
-def choose_measured(g, table: Optional[CalibrationTable] = None) -> str:
+def choose_measured(g, table: Optional[CalibrationTable] = None, *,
+                    mesh=None) -> str:
     """Resolve ``algorithm="auto"`` through a calibration table.
 
     Exact feature-bin hit → fastest measured lane; miss → nearest bin;
     no table / empty table / stale lane name → the heuristic
-    ``registry._default_chooser``. Always returns a registered lane.
+    ``registry._default_chooser``. With a multi-device ``mesh`` the pick is
+    promoted to its distributed counterpart
+    (``registry._promote_distributed``). Always returns a registered lane.
     """
     table = table if table is not None else get_default_table()
+    lane = None
     if table is not None:
         lane = table.choose(g)
-        if lane is not None and lane in registry.available_algorithms():
-            return lane
-    return registry._default_chooser(g)
+        if lane is not None and lane not in registry.available_algorithms():
+            lane = None
+    if lane is None:
+        lane = registry._default_chooser(g)
+    return registry._promote_distributed(lane, mesh)
 
 
 def install_measured_chooser(table: Optional[CalibrationTable] = None

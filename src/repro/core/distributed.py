@@ -1,54 +1,53 @@
-"""Multi-device / multi-pod triangle counting via shard_map.
+"""Multi-device / multi-pod triangle counting — the mesh-planned lanes.
 
-TPU adaptation of Azad/Buluç's distributed masked SpGEMM (the paper cites the
-distributed-masking variant as promising future work, §5): the host-built tile
-schedule is already a communication-free decomposition of C = A ∘ (L·U) —
-every triple is independent — so the distribution strategy is:
+TPU adaptation of Azad/Buluç's distributed masked SpGEMM (the paper cites
+the distributed-masking variant as promising future work, §5), promoted into
+the plan/execute engine (PR 9): distribution is no longer a one-shot
+``shard_map`` bolted on beside the sessions, it is a *plan* —
+``repro.core.engine.plan_triangle_count(g, "<lane>_distributed",
+mesh=mesh)`` runs device prep once, deals the work round-robin across the
+mesh's shards (``repro.graphs.device.ShardedDeviceCSR`` /
+``deal_across_shards``), and binds each work unit to a per-shard executable
+cached in the engine's process-wide LRU under a mesh-extended key. The
+partition scheme:
 
-  * pad the heavy-first triple list to a multiple of the device count,
-  * deal triples round-robin (device d gets triples d, d+P, d+2P, …): because
-    the list is sorted heavy-first, every device receives an equal mix of
-    dense and sparse tiles — static straggler mitigation, the multi-device
+  * degree-class buckets (intersection) or the heavy-first tile schedule
+    (matrix) are dealt round-robin — shard ``s`` gets rows ``s``,
+    ``s + P``, ``s + 2P``, … — so every shard receives an equal mix of
+    dense and sparse work: static straggler mitigation, the multi-device
     analogue of the paper's TwoSmall/TwoLarge workload grouping,
-  * each device reduces its partial counts locally; one scalar `psum` over
-    all mesh axes yields the global count.
+  * per-shard padding is *length-gated* inside the executables (dynamic
+    chunk-loop trip counts + a masked tail), so dealt padding contributes
+    zero to the count and (on the matrix lane) zero FLOPs,
+  * each shard reduces locally; ONE scalar ``psum`` over all mesh axes per
+    stage yields the global count. Communication volume is O(P) scalars —
+    triangle counting at 512 chips is bandwidth-free by construction, which
+    the multi-pod dry-run (``launch/dryrun.py --tc``) verifies structurally
+    against the same cached executable builder.
 
-The same scheme shards the intersection method over edges. Communication
-volume is O(P) scalars total — triangle counting at 512 chips is bandwidth-
-free by construction, which the multi-pod dry-run (launch/dryrun.py --arch tc)
-verifies structurally.
+Because the lanes are ordinary ``TrianglePlan``s, everything the engine
+gives single-host lanes now holds with a mesh present: warm sessions replay
+with zero recompiles (cache-stats-asserted in ``tests/test_distributed.py``),
+``TriangleCounter`` / ``count_many`` route through them, and both choosers
+(heuristic and measured) promote their pick to the matching distributed lane
+whenever the session carries a multi-device mesh.
 
-Both variants register with the algorithm registry as the
-``"matrix_distributed"`` / ``"intersection_distributed"`` lanes; the front
-door is ``TriangleCounter(g, CountOptions(algorithm="..._distributed"),
-mesh=mesh)``. The legacy ``triangle_count_*_distributed`` functions below are
-deprecated shims kept for source compatibility.
+This module only registers the planners. The legacy
+``triangle_count_*_distributed`` functions below are deprecated shims kept
+for source compatibility — they route through the facade and the planned
+lanes (bit-identical results, one ``DeprecationWarning``).
 """
 
 from __future__ import annotations
 
 from typing import Optional, Sequence
 
-import numpy as np
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
-
-try:  # jax ≥ 0.6 exports shard_map at top level
-    from jax import shard_map
-except ImportError:  # older jax ships it under experimental
-    from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
 from repro.graphs.formats import Graph
-from repro.graphs.device import DEFAULT_SHAPE_POLICY
-from repro.core import prep
-from repro.core.engine import (
-    DEFAULT_WIDTHS,
-    build_tile_schedule,
-    choose_block,
-)
-from repro.core.registry import OneShotPlan, register_algorithm
-from repro.kernels.intersect.ops import intersect_counts, resolve_strategy
+from repro.core.engine import plan_triangle_count
+from repro.core.options import DEFAULT_WIDTHS
+from repro.core.registry import register_algorithm
 
 __all__ = [
     "triangle_count_matrix_distributed",
@@ -56,154 +55,21 @@ __all__ = [
 ]
 
 
-def _deal(arr: np.ndarray, ndev: int) -> np.ndarray:
-    """Pad with zeros then round-robin deal axis 0 into (ndev, T/ndev, ...)."""
-    t = arr.shape[0]
-    pad = (-t) % ndev
-    if pad:
-        arr = np.concatenate([arr, np.zeros((pad,) + arr.shape[1:], arr.dtype)])
-    tt = arr.shape[0]
-    idx = np.arange(tt).reshape(tt // ndev, ndev).T.reshape(-1)  # deal
-    return arr[idx].reshape(ndev, tt // ndev, *arr.shape[1:])
-
-
-def _matrix_distributed(
-    g: Graph,
-    mesh: Optional[Mesh] = None,
-    *,
-    block: int = 128,
-) -> int:
-    """Masked block-SpGEMM TC sharded over every axis of ``mesh``."""
-    if mesh is None:
-        from repro.launch.mesh import make_mesh
-        mesh = make_mesh((jax.device_count(),), ("data",))
-    ndev = int(np.prod(mesh.devices.shape))
-    l_sel, u_sel, a_sel, _ = build_tile_schedule(g, block=block)
-    if l_sel.shape[0] == 0:
-        return 0
-    l_d, u_d, a_d = (_deal(x, ndev) for x in (l_sel, u_sel, a_sel))
-    axes = tuple(mesh.axis_names)
-    spec = P(axes)  # shard leading (device) axis across all mesh axes
-
-    @jax.jit
-    def count(l, u, a):
-        def local(l, u, a):
-            l, u, a = l[0], u[0], a[0]  # drop unit device dim
-            prod = jnp.einsum("tik,tkj->tij", l, u,
-                              preferred_element_type=jnp.float32)
-            part = (prod * a).sum()
-            return jax.lax.psum(part, axes)
-
-        return shard_map(
-            local, mesh=mesh,
-            in_specs=(spec, spec, spec),
-            out_specs=P(),
-        )(l, u, a)
-
-    # reshape so axis 0 == ndev factors over every mesh axis
-    shape = mesh.devices.shape
-    l_d = l_d.reshape(shape + l_d.shape[1:])
-    u_d = u_d.reshape(shape + u_d.shape[1:])
-    a_d = a_d.reshape(shape + a_d.shape[1:])
-    # flatten mesh axes back into one leading axis for PartitionSpec((axes,))
-    l_d = l_d.reshape((ndev,) + l_d.shape[len(shape):])
-    u_d = u_d.reshape((ndev,) + u_d.shape[len(shape):])
-    a_d = a_d.reshape((ndev,) + a_d.shape[len(shape):])
-    out = count(jnp.asarray(l_d), jnp.asarray(u_d), jnp.asarray(a_d))
-    return int(round(float(out)))
-
-
-def _intersection_distributed(
-    g: Graph,
-    mesh: Optional[Mesh] = None,
-    *,
-    widths: Sequence[int] = DEFAULT_WIDTHS,
-    strategy: str = "auto",
-) -> int:
-    """Forward-algorithm TC with each degree bucket's edges sharded.
-
-    The prep stage is the device-resident pipeline (``repro.core.prep``):
-    orientation, bucketing, and the padded gathers run as jitted stages and
-    the resulting ``DeviceBucket`` arrays are resharded directly — no
-    per-graph host numpy beyond the schedule scalars.
-
-    Args:
-      g: undirected simple ``Graph``.
-      mesh: jax device mesh (defaults to a 1-D mesh over all devices); the
-        bucket's edge axis is sharded over every mesh axis.
-      widths: degree-class bucket widths.
-      strategy: per-bucket set-intersection core, resolved on the host with
-        the same ``resolve_strategy`` cost model the plan stage uses — each
-        shard then runs the strategy's jnp core locally, so the sharded path
-        and the single-device engine pick identical per-bucket kernels.
-
-    Returns:
-      The exact triangle count as a Python int (one scalar psum per bucket).
-    """
-    if mesh is None:
-        from repro.launch.mesh import make_mesh
-        mesh = make_mesh((jax.device_count(),), ("data",))
-    ndev = int(np.prod(mesh.devices.shape))
-    axes = tuple(mesh.axis_names)
-    buckets = prep.prepare_intersection_buckets_device(
-        g, variant="filtered", widths=widths, policy=DEFAULT_SHAPE_POLICY,
-    )
-    id_range = g.n + 2  # real ids plus the n / n+1 in-row sentinels
-    total = 0
-    for b in buckets:
-        u, v = b.u_lists, b.v_lists
-        strat, bits = resolve_strategy(b.width, id_range, strategy=strategy)
-        # pad rows with disjoint sentinels so padding contributes 0
-        pad = (-u.shape[0]) % ndev
-        if pad:
-            u = jnp.concatenate(
-                [u, jnp.full((pad, u.shape[1]), -1, u.dtype)])
-            v = jnp.concatenate(
-                [v, jnp.full((pad, v.shape[1]), -2, v.dtype)])
-        u = u.reshape(ndev, -1, u.shape[1])
-        v = v.reshape(ndev, -1, v.shape[1])
-        spec = P(axes)
-
-        @jax.jit
-        def count(u, v, strat=strat, bits=bits):
-            def local(u, v):
-                u, v = u[0], v[0]
-                counts = intersect_counts(
-                    u, v, strategy=strat, backend="jnp", bitmap_bits=bits
-                )
-                return jax.lax.psum(counts.sum(), axes)
-
-            return shard_map(local, mesh=mesh, in_specs=(spec, spec),
-                             out_specs=P())(u, v)
-
-        total += int(count(jnp.asarray(u), jnp.asarray(v)))
-    return total
-
-
-# ---------------------------------------------------------------------------
-# Registry planners + deprecated one-shot shims
-# ---------------------------------------------------------------------------
-
-def _planner_matrix(g: Graph, options, *, mesh=None) -> OneShotPlan:
-    """Registry planner for the ``"matrix_distributed"`` lane. Each count
-    re-shards the host-built schedule (one-shot semantics)."""
-    block = choose_block(g) if options.block == "auto" else int(options.block)
-    return OneShotPlan(
-        fn=lambda: _matrix_distributed(g, mesh, block=block),
-        algorithm="matrix_distributed",
-        meta=dict(graph=g.name, n=g.n, m=g.m_undirected, block=block),
+def _planner_matrix(g: Graph, options, *, mesh=None):
+    """Registry planner for the ``"matrix_distributed"`` lane: a first-class
+    ``TrianglePlan`` over the dealt tile schedule (prep once, cached
+    per-shard executable, scalar psum)."""
+    return plan_triangle_count(
+        g, "matrix_distributed", mesh=mesh,
+        **options.plan_kwargs("matrix_distributed"),
     )
 
 
-def _planner_intersection(g: Graph, options, *, mesh=None) -> OneShotPlan:
+def _planner_intersection(g: Graph, options, *, mesh=None):
     """Registry planner for the ``"intersection_distributed"`` lane."""
-    return OneShotPlan(
-        fn=lambda: _intersection_distributed(
-            g, mesh, widths=options.widths, strategy=options.strategy
-        ),
-        algorithm="intersection_distributed",
-        meta=dict(graph=g.name, n=g.n, m=g.m_undirected,
-                  widths=tuple(options.widths), strategy=options.strategy),
+    return plan_triangle_count(
+        g, "intersection_distributed", mesh=mesh,
+        **options.plan_kwargs("intersection_distributed"),
     )
 
 

@@ -76,6 +76,12 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+try:  # jax ≥ 0.6 exports shard_map at top level
+    from jax import shard_map
+except ImportError:  # older jax ships it under experimental
+    from jax.experimental.shard_map import shard_map
 
 from repro.graphs.formats import (
     Graph,
@@ -94,10 +100,13 @@ from repro.graphs.device import (
     DeviceCSR,
     DeviceGraph,
     ShapePolicy,
+    ShardedDeviceCSR,
     bfs_levels,
+    deal_across_shards,
     dynamic_update_step,
     fits_int32_pair_keys,
     next_pow2,
+    shard_valid_counts,
 )
 from repro.core import prep
 # _two_core_peel: back-compat re-export (it lived here before PR 4)
@@ -139,11 +148,29 @@ __all__ = [
     "resolve_strategy",
     "executable_cache_info",
     "clear_executable_cache",
+    "mesh_cache_component",
     "DEFAULT_WIDTHS",
+    "DISTRIBUTED_ALGORITHMS",
     "STRATEGIES",
 ]
 
 ALGORITHMS = ("intersection", "matrix", "subgraph", "hash", "bfs")
+
+# Mesh-planned lanes: same plan/execute machinery, per-shard executables in
+# the same process-wide cache (key gains the mesh component), one scalar
+# psum per stage. ``plan_triangle_count(..., mesh=...)`` accepts these.
+DISTRIBUTED_ALGORITHMS = ("intersection_distributed", "matrix_distributed")
+
+
+def mesh_cache_component(mesh) -> tuple:
+    """The hashable mesh identity folded into distributed cache keys:
+    ``(axis names, mesh shape, flat device ids)``. Two meshes with equal
+    components produce identical sharded programs, so their executables may
+    be shared; any shard-shape change (e.g. (8,) → (4, 2)) misses exactly
+    once."""
+    return (tuple(str(a) for a in mesh.axis_names),
+            tuple(int(s) for s in mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat))
 
 
 # ---------------------------------------------------------------------------
@@ -409,7 +436,18 @@ def _build_edge_executable(strategy: str, bitmap_bits: Optional[int],
     _, width, mk, n1 = (int(x) for x in shape_key[:4])
     n = n1 - 1
 
-    @jax.jit
+    body = _edge_support_body(strategy, bitmap_bits, width, mk, n)
+    return jax.jit(body)
+
+
+def _edge_support_body(strategy: str, bitmap_bits: Optional[int],
+                       width: int, mk: int, n: int) -> Callable:
+    """The traced slot-ordered support computation shared by the single-host
+    edge executable (jitted directly) and the distributed one (wrapped in
+    shard_map over a dealt row partition — the scatters target the full
+    (mk,) slot space whichever rows a shard holds, so partial supports sum
+    under psum)."""
+
     def run(u_lists, v_lists, src, dst, row_ptr):
         matched_u, matched_v = intersect_matches_both(
             u_lists, v_lists, strategy=strategy, bitmap_bits=bitmap_bits)
@@ -534,9 +572,116 @@ def _build_delta_executable(strategy: str, bitmap_bits: Optional[int],
     return run
 
 
+def _build_dist_intersect_executable(strategy: str,
+                                     bitmap_bits: Optional[int],
+                                     shape_key: tuple, mesh) -> Callable:
+    """One degree bucket's sharded intersection count: every shard runs the
+    resolved jnp core over its dealt rows, length-gated so padding costs
+    nothing, and ONE scalar psum yields the global partial.
+
+    ``shape_key`` is ``(rows_per_shard, width, chunk)``. The chunk loop has
+    a *dynamic* trip count ``ceil(valid / chunk)`` — chunks past a shard's
+    last real row are never dispatched — and the tail chunk masks rows at
+    index ≥ valid out of the sum, so dealt padding contributes zero to the
+    count even if its slots hold garbage (the poison regression test relies
+    on exactly this, not on sentinel rows happening to be inert).
+    """
+    rows, width, chunk = (int(x) for x in shape_key[:3])
+    axes = tuple(mesh.axis_names)
+    spec = PartitionSpec(axes)
+
+    @jax.jit
+    def run(u, v, valid):
+        def local(u, v, valid):
+            u, v, valid = u[0], v[0], valid[0]
+
+            def body(i, acc):
+                start = i * chunk
+                uu = jax.lax.dynamic_slice_in_dim(u, start, chunk)
+                vv = jax.lax.dynamic_slice_in_dim(v, start, chunk)
+                counts = intersect_counts(
+                    uu, vv, strategy=strategy, backend="jnp",
+                    bitmap_bits=bitmap_bits)
+                rowid = start + jnp.arange(chunk, dtype=jnp.int32)
+                return acc + jnp.sum(
+                    jnp.where(rowid < valid, counts, 0), dtype=jnp.int32)
+
+            active = (valid + chunk - 1) // chunk
+            acc = jax.lax.fori_loop(0, active, body, jnp.int32(0))
+            return jax.lax.psum(acc, axes)
+
+        return shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
+                         out_specs=PartitionSpec(),
+                         check_rep=False)(u, v, valid)
+
+    return run
+
+
+def _build_dist_matrix_executable(shape_key: tuple, mesh) -> Callable:
+    """The sharded masked block-SpGEMM count: each shard reduces its dealt
+    tile triples locally, one scalar psum yields the global sum.
+
+    ``shape_key`` is ``(tiles_per_shard, block, block)``. The tile loop's
+    trip count is the shard's *real* tile count, so dealt zero-padding
+    tiles dispatch no FLOPs at all (tile granularity = exact gating; the
+    NaN-poison regression test asserts padded slots are never touched).
+    """
+    axes = tuple(mesh.axis_names)
+    spec = PartitionSpec(axes)
+
+    @jax.jit
+    def run(l, u, a, valid):
+        def local(l, u, a, valid):
+            l, u, a, valid = l[0], u[0], a[0], valid[0]
+
+            def body(i, acc):
+                lt = jax.lax.dynamic_index_in_dim(l, i, keepdims=False)
+                ut = jax.lax.dynamic_index_in_dim(u, i, keepdims=False)
+                at = jax.lax.dynamic_index_in_dim(a, i, keepdims=False)
+                prod = jnp.dot(lt, ut,
+                               preferred_element_type=jnp.float32)
+                return acc + (prod * at).sum(dtype=jnp.float32)
+
+            acc = jax.lax.fori_loop(0, valid, body, jnp.float32(0.0))
+            return jax.lax.psum(acc, axes)
+
+        return shard_map(local, mesh=mesh, in_specs=(spec,) * 4,
+                         out_specs=PartitionSpec(),
+                         check_rep=False)(l, u, a, valid)
+
+    return run
+
+
+def _build_dist_edge_executable(strategy: str, bitmap_bits: Optional[int],
+                                shape_key: tuple, mesh) -> Callable:
+    """One bucket's sharded per-edge support: each shard scatters its dealt
+    rows' contributions into the full (mk,) slot space and one vector psum
+    (communication = the support itself, the lane's output) combines them.
+    ``shape_key`` is ``(rows_per_shard, width, mk, n1, *peel_knobs)``;
+    ``row_ptr`` is replicated (in_spec ``P()``)."""
+    _, width, mk, n1 = (int(x) for x in shape_key[:4])
+    body = _edge_support_body(strategy, bitmap_bits, width, mk, n1 - 1)
+    axes = tuple(mesh.axis_names)
+    spec = PartitionSpec(axes)
+
+    @jax.jit
+    def run(u_lists, v_lists, src, dst, row_ptr):
+        def local(u, v, s, d, rp):
+            supp = body(u[0], v[0], s[0], d[0], rp)
+            return jax.lax.psum(supp, axes)
+
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=(spec, spec, spec, spec, PartitionSpec()),
+            out_specs=PartitionSpec(), check_rep=False,
+        )(u_lists, v_lists, src, dst, row_ptr)
+
+    return run
+
+
 def get_executable(algorithm: str, backend: str, interpret: bool,
                    shape_key: tuple, strategy: Optional[str] = None,
-                   bitmap_bits: Optional[int] = None) -> Callable:
+                   bitmap_bits: Optional[int] = None, mesh=None) -> Callable:
     """Fetch (or build) the jitted executable for one statically-shaped work
     unit.
 
@@ -551,7 +696,10 @@ def get_executable(algorithm: str, backend: str, interpret: bool,
         through the plan) | "edge" (per-edge support contributions for one
         filtered bucket — the ``TrussPlan`` lane) | "dynamic_step" /
         "delta" (the ``DynamicPlan`` lane: the in-place edge-update step
-        and the anchored triangle-delta pass).
+        and the anchored triangle-delta pass) | "intersection_distributed"
+        / "matrix_distributed" / "edge_distributed" (the mesh-planned
+        sharded stages: shard_map over a round-robin dealt partition,
+        length-gated per shard, one psum; require ``mesh``).
       backend: "jnp" | "pallas" | "ref" (see ``repro.kernels.*.ops``).
       interpret: pallas interpret mode flag (part of the key: interpret and
         compiled kernels are distinct executables).
@@ -567,22 +715,32 @@ def get_executable(algorithm: str, backend: str, interpret: bool,
         edge lane; None for matrix/vertex.
       bitmap_bits: static packed-bitmap capacity when strategy="bitmap",
         else None.
+      mesh: jax device mesh — required for (and only consumed by) the
+        ``*_distributed`` algorithms. ``mesh_cache_component(mesh)`` is
+        appended to the cache key, so equal-mesh plans share per-shard
+        executables (zero recompiles steady-state) and a shard-shape change
+        misses exactly once.
 
     Returns:
       A jitted callable reducing the work unit (a scalar count, or an (n,)
       per-vertex vector for "vertex"). Cached process-wide under
       ``(algorithm, strategy, backend, interpret, bitmap_bits, shape)``
-      so plans over same-shaped buckets/schedules share the compiled kernel.
+      (+ the mesh component when sharded) so plans over same-shaped
+      buckets/schedules share the compiled kernel.
     """
     # validate BEFORE touching the cache so bad args never claim a key or
     # skew the hit/miss counters
     if backend not in ("jnp", "pallas", "ref"):
         raise ValueError(f"unknown backend {backend!r}; "
                          f"expected 'jnp', 'pallas', or 'ref'")
-    if algorithm in ("intersection", "subgraph", "edge") \
+    if algorithm in ("intersection", "subgraph", "edge",
+                     "intersection_distributed", "edge_distributed") \
             and strategy not in STRATEGIES:
         raise ValueError(f"unresolved strategy {strategy!r}; "
                          f"expected one of {STRATEGIES}")
+    if algorithm.endswith("_distributed") and mesh is None:
+        raise ValueError(
+            f"algorithm {algorithm!r} needs a mesh; pass mesh=")
     builders: Dict[str, Callable[[], Callable]] = {
         "intersection": lambda: _build_intersect_executable(
             strategy, backend, interpret, bitmap_bits),
@@ -597,12 +755,20 @@ def get_executable(algorithm: str, backend: str, interpret: bool,
             tuple(shape_key)),
         "delta": lambda: _build_delta_executable(
             strategy, bitmap_bits, tuple(shape_key)),
+        "intersection_distributed": lambda: _build_dist_intersect_executable(
+            strategy, bitmap_bits, tuple(shape_key), mesh),
+        "matrix_distributed": lambda: _build_dist_matrix_executable(
+            tuple(shape_key), mesh),
+        "edge_distributed": lambda: _build_dist_edge_executable(
+            strategy, bitmap_bits, tuple(shape_key), mesh),
     }
     builder = builders.get(algorithm)
     if builder is None:
         raise ValueError(f"unknown algorithm {algorithm!r}")
     key = (algorithm, strategy, backend, bool(interpret), bitmap_bits,
            tuple(shape_key))
+    if mesh is not None:
+        key = key + (mesh_cache_component(mesh),)
     return _EXECUTABLE_CACHE.get_or_build(key, builder)
 
 
@@ -730,7 +896,7 @@ class TrianglePlan:
 
     def count(self) -> int:
         """Exact triangle count; pure device replay of the cached stages."""
-        if self.algorithm == "matrix":
+        if self.algorithm in ("matrix", "matrix_distributed"):
             total_f = 0.0
             for st in self.stages:
                 total_f += float(st.executable(*st.args))
@@ -915,6 +1081,109 @@ def _plan_matrix(g: Graph, block, permute: bool, backend: str,
             shape_key=shape_key,
         ))
     meta = dict(permute=permute, **stats)
+    return stages, 1, meta
+
+
+def _plan_intersection_distributed(
+        g, mesh, variant: str, backend: str, interpret: bool,
+        widths: Sequence[int], strategy: str = "auto",
+        bitmap_bits: Optional[int] = None, prep_backend: str = "device",
+        shape_policy: Optional[ShapePolicy] = None,
+) -> Tuple[List[_Stage], int, dict]:
+    """The intersection lane over a ``ShardedDeviceCSR``: device prep once,
+    each degree bucket dealt round-robin across the mesh's shards, one
+    cached length-gated executable + one scalar psum per bucket. The
+    intersection cores always run their jnp formulation under shard_map
+    (exactly as the pre-engine one-shot lane did); ``backend`` is recorded
+    but does not change the sharded program."""
+    policy = shape_policy if shape_policy is not None else DEFAULT_SHAPE_POLICY
+    sharded = ShardedDeviceCSR.from_graph(
+        g, mesh, variant=variant, widths=widths, policy=policy,
+        prep_backend=prep_backend,
+    )
+    id_range = g.n + 2  # real ids + the in-row sentinels n / n+1
+    stages = []
+    for b in sharded.buckets:
+        strat, bits = _resolve_bucket_strategy(b.width, id_range, strategy,
+                                               bitmap_bits)
+        shape_key = b.shape + (b.chunk,)
+        fn = get_executable("intersection_distributed", "jnp", False,
+                            shape_key, strategy=strat, bitmap_bits=bits,
+                            mesh=mesh)
+        stages.append(_Stage(
+            executable=fn,
+            args=(b.u_lists, b.v_lists, b.valid),
+            shape_key=shape_key,
+            strategy=strat,
+            bitmap_bits=bits,
+        ))
+    meta = dict(
+        variant=variant,
+        widths=tuple(widths),
+        strategy=strategy,
+        prep_backend=prep_backend,
+        shape_policy=policy.key(),
+        core_backend="jnp",
+        bucket_shapes=[s.shape_key for s in stages],
+        bucket_strategies=[(s.shape_key[1], s.strategy) for s in stages],
+        bucket_edges=[b.edges for b in sharded.buckets],
+        edges=sharded.edges,
+        mesh_axes=tuple(str(a) for a in mesh.axis_names),
+        mesh_shape=tuple(int(s) for s in mesh.devices.shape),
+        num_shards=sharded.num_shards,
+        rows_per_shard=[b.rows_per_shard for b in sharded.buckets],
+        shard_valid=[b.shard_rows for b in sharded.buckets],
+        shard_work=sharded.shard_work(),
+    )
+    return stages, (6 if variant == "full" else 1), meta
+
+
+def _plan_matrix_distributed(
+        g: Graph, mesh, block, permute: bool, backend: str, interpret: bool,
+) -> Tuple[List[_Stage], int, dict]:
+    """The matrix lane over the mesh: the host-built heavy-first tile
+    schedule is dealt round-robin across shards (equal dense/sparse mix per
+    shard by construction), zero-padded to the per-shard extent, and the
+    cached executable's tile loop runs exactly each shard's real tile count
+    — dealt padding dispatches no FLOPs."""
+    if block == "auto":
+        block = choose_block(g)
+    l_sel, u_sel, a_sel, stats = build_tile_schedule(
+        g, block=block, permute=permute
+    )
+    ndev = int(np.prod(mesh.devices.shape))
+    axes = tuple(mesh.axis_names)
+    row_sharding = NamedSharding(mesh, PartitionSpec(axes))
+    stages = []
+    t = int(l_sel.shape[0])
+    tiles_ps = -(-t // ndev) if t else 0
+    valid_h = shard_valid_counts(t, ndev)
+    if t:
+        l_d, u_d, a_d = (
+            jax.device_put(
+                deal_across_shards(jnp.asarray(x), ndev, tiles_ps, fill=0),
+                row_sharding)
+            for x in (l_sel, u_sel, a_sel)
+        )
+        valid = jax.device_put(jnp.asarray(valid_h), row_sharding)
+        shape_key = (tiles_ps,) + tuple(l_sel.shape[1:])
+        fn = get_executable("matrix_distributed", "jnp", False, shape_key,
+                            mesh=mesh)
+        stages.append(_Stage(
+            executable=fn,
+            args=(l_d, u_d, a_d, valid),
+            shape_key=shape_key,
+        ))
+    meta = dict(
+        permute=permute,
+        **stats,
+        mesh_axes=axes,
+        mesh_shape=tuple(int(s) for s in mesh.devices.shape),
+        num_shards=ndev,
+        tiles_per_shard=tiles_ps,
+        shard_valid=[tuple(int(x) for x in valid_h)],
+        shard_work=tuple(int(x) for x in valid_h),
+    )
     return stages, 1, meta
 
 
@@ -1138,6 +1407,7 @@ def plan_triangle_count(
     bitmap_bits: Optional[int] = None,
     prep_backend: str = "device",
     shape_policy: Optional[ShapePolicy] = None,
+    mesh=None,
 ) -> TrianglePlan:
     """Run the host stage once and return a device-resident ``TrianglePlan``.
 
@@ -1145,7 +1415,11 @@ def plan_triangle_count(
       g: the input ``Graph`` (undirected simple CSR).
       algorithm: "intersection" | "matrix" | "subgraph" | "hash" (the
         TRUST-style per-vertex hashing lane) | "bfs" (level-ordered
-        wedge closure).
+        wedge closure) | "intersection_distributed" /
+        "matrix_distributed" (the mesh-planned sharded lanes: prep once,
+        degree buckets / heavy-first tiles dealt round-robin across the
+        mesh's shards, per-shard executables cached under a mesh-extended
+        key, one scalar psum per stage).
       backend: "jnp" | "pallas" | "ref" per-kernel execution path.
       interpret: pallas interpret mode (True runs kernel bodies on CPU);
         None (default) resolves to ``repro.core.options.DEFAULT_INTERPRET``
@@ -1167,6 +1441,10 @@ def plan_triangle_count(
         "host" runs the numpy parity path.
       shape_policy: the ``ShapePolicy`` rounding device-prep extents into
         static shape classes; None means ``DEFAULT_SHAPE_POLICY``.
+      mesh: jax device mesh — consumed by the ``*_distributed`` lanes only
+        (None there defaults to a 1-D mesh over every visible device,
+        matching the historical one-shot functions); single-host lanes
+        ignore it.
 
     Returns:
       A ``TrianglePlan`` whose ``count()`` replays the device stage only.
@@ -1193,9 +1471,24 @@ def plan_triangle_count(
     elif algorithm == "bfs":
         stages, divisor, meta = _plan_bfs(g, backend, interpret, widths,
                                           strategy, bitmap_bits, shape_policy)
+    elif algorithm in DISTRIBUTED_ALGORITHMS:
+        if mesh is None:
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((jax.device_count(),), ("data",))
+        if algorithm == "intersection_distributed":
+            stages, divisor, meta = _plan_intersection_distributed(
+                g, mesh, variant, backend, interpret, widths, strategy,
+                bitmap_bits, prep_backend, shape_policy,
+            )
+        else:
+            stages, divisor, meta = _plan_matrix_distributed(
+                g, mesh, block, permute, backend, interpret,
+            )
+        meta["mesh"] = mesh_cache_component(mesh)
     else:
         raise ValueError(
-            f"unknown algorithm {algorithm!r}; expected one of {ALGORITHMS}"
+            f"unknown algorithm {algorithm!r}; expected one of "
+            f"{ALGORITHMS + DISTRIBUTED_ALGORITHMS}"
         )
     meta.setdefault("graph", g.name)
     meta["n"], meta["m"] = g.n, g.m_undirected
@@ -1292,7 +1585,7 @@ class _EdgeStage:
 
 def _edge_stages(g, *, widths: Sequence[int], strategy: str,
                  bitmap_bits: Optional[int], prep_backend: str,
-                 policy: ShapePolicy, peel_key: tuple):
+                 policy: ShapePolicy, peel_key: tuple, mesh=None):
     """Build one graph's edge-support stages: prep the filtered buckets (on
     the requested backend), materialize the slot→key addressing structure
     (sorted keys + permutation + forward row_ptr), and bind each bucket to
@@ -1303,6 +1596,12 @@ def _edge_stages(g, *, widths: Sequence[int], strategy: str,
     edges and ``perm`` reorders slot-indexed support into key order; the
     k-truss peel calls this once per round on the re-oriented survivor
     graph.
+
+    With ``mesh`` set, each bucket's rows are dealt round-robin across the
+    mesh's shards (``deal_across_shards``; ``row_ptr`` replicated) and the
+    stages bind to the cached "edge_distributed" executables — every shard
+    scatters its rows into the full (mk,) slot space and one vector psum
+    per bucket combines the partial supports.
     """
     n = g.n
     prep.check_edge_key_range(n)
@@ -1317,6 +1616,12 @@ def _edge_stages(g, *, widths: Sequence[int], strategy: str,
         row_ptr = jnp.asarray(row_ptr_h, dtype=jnp.int32)
     mk, n1 = int(keys.shape[0]), n + 1
     id_range = n + 2  # real ids + the in-row sentinels n (u) and n+1 (v)
+    if mesh is not None:
+        ndev = int(np.prod(mesh.devices.shape))
+        row_sharding = NamedSharding(mesh, PartitionSpec(
+            tuple(mesh.axis_names)))
+        row_ptr = jax.device_put(row_ptr,
+                                 NamedSharding(mesh, PartitionSpec()))
     stages = []
     for b in buckets:
         # mask-specific cost model: the probe mask pays two searchsorted
@@ -1331,12 +1636,30 @@ def _edge_stages(g, *, widths: Sequence[int], strategy: str,
                     f"capacity would silently never match"
                 )
             bits = int(bitmap_bits)
-        shape_key = b.shape + (mk, n1) + tuple(peel_key)
-        fn = get_executable("edge", "jnp", False, shape_key, strategy=strat,
-                            bitmap_bits=bits)
+        if mesh is None:
+            shape_key = b.shape + (mk, n1) + tuple(peel_key)
+            fn = get_executable("edge", "jnp", False, shape_key,
+                                strategy=strat, bitmap_bits=bits)
+            args = (b.u_lists, b.v_lists, b.src, b.dst, row_ptr)
+        else:
+            rows = policy.round_edges(-(-b.edges // ndev))
+            u = jax.device_put(
+                deal_across_shards(b.u_lists, ndev, rows, fill=-1),
+                row_sharding)
+            v = jax.device_put(
+                deal_across_shards(b.v_lists, ndev, rows, fill=-2),
+                row_sharding)
+            sb = jax.device_put(
+                deal_across_shards(b.src, ndev, rows, fill=0), row_sharding)
+            db = jax.device_put(
+                deal_across_shards(b.dst, ndev, rows, fill=0), row_sharding)
+            shape_key = (rows, b.width, mk, n1) + tuple(peel_key)
+            fn = get_executable("edge_distributed", "jnp", False, shape_key,
+                                strategy=strat, bitmap_bits=bits, mesh=mesh)
+            args = (u, v, sb, db, row_ptr)
         stages.append(_EdgeStage(
             executable=fn,
-            args=(b.u_lists, b.v_lists, b.src, b.dst, row_ptr),
+            args=args,
             shape_key=shape_key,
             strategy=strat,
         ))
@@ -1345,6 +1668,9 @@ def _edge_stages(g, *, widths: Sequence[int], strategy: str,
         bucket_strategies=[(s.shape_key[1], s.strategy) for s in stages],
         bucket_edges=[b.edges for b in buckets],
     )
+    if mesh is not None:
+        meta["mesh"] = mesh_cache_component(mesh)
+        meta["num_shards"] = ndev
     return stages, keys, perm, m_edges, meta
 
 
@@ -1381,6 +1707,7 @@ class TrussPlan:
     meta: Dict[str, Any]
     prep_seconds: float
     executions: int = 0
+    mesh: Any = None  # device mesh when the support stages are sharded
 
     algorithm: str = "edge"
 
@@ -1432,7 +1759,7 @@ class TrussPlan:
         kw = dict(widths=self.widths, strategy=self.strategy,
                   bitmap_bits=self.bitmap_bits,
                   prep_backend=self.prep_backend, policy=self.policy,
-                  peel_key=peel_key)
+                  peel_key=peel_key, mesh=self.mesh)
         if start is None:
             stages, keys, perm, m_cur = (self.stages, self.edge_keys,
                                          self.perm, self.m_edges)
@@ -1558,6 +1885,7 @@ def plan_edge_support(
     shape_policy: Optional[ShapePolicy] = None,
     max_peel_iters: int = 1000,
     peel_early_exit: bool = True,
+    mesh=None,
 ) -> TrussPlan:
     """Run the edge lane's prep once and return a replayable ``TrussPlan``.
 
@@ -1580,6 +1908,11 @@ def plan_edge_support(
       peel_early_exit: stop the peel at the fixpoint (default) or run
         exactly ``max_peel_iters`` rounds (identical result; benchmarking
         mode). Both knobs are folded into the edge executables' cache key.
+      mesh: optional jax device mesh — shards every bucket's support rows
+        round-robin across the mesh (``deal_across_shards``); the partial
+        (mk,) supports combine under one vector psum per bucket. Peel
+        rounds re-deal the survivor graph over the same mesh. None keeps
+        the single-host stages.
 
     Returns:
       A ``TrussPlan`` exposing ``edge_support()`` / ``k_truss(k)`` /
@@ -1596,7 +1929,7 @@ def plan_edge_support(
     stages, keys, perm, m_edges, bucket_meta = _edge_stages(
         g, widths=tuple(widths), strategy=strategy, bitmap_bits=bitmap_bits,
         prep_backend=prep_backend, policy=policy,
-        peel_key=(max_peel_iters, peel_early_exit),
+        peel_key=(max_peel_iters, peel_early_exit), mesh=mesh,
     )
     meta = dict(
         graph=g.name,
@@ -1627,12 +1960,14 @@ def plan_edge_support(
         peel_early_exit=peel_early_exit,
         meta=meta,
         prep_seconds=prep_seconds,
+        mesh=mesh,
     )
 
 
 def _edge_planner(g: Graph, options, *, mesh=None) -> TrussPlan:
-    """Registry planner: CountOptions → edge-lane TrussPlan."""
-    return plan_edge_support(g, **options.plan_kwargs("edge"))
+    """Registry planner: CountOptions → edge-lane TrussPlan (support
+    stages sharded over ``mesh`` when the session carries one)."""
+    return plan_edge_support(g, mesh=mesh, **options.plan_kwargs("edge"))
 
 
 register_algorithm("edge", _edge_planner)

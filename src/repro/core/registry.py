@@ -5,16 +5,19 @@ so lane choice is a tunable of one system (as TRUST, arXiv:2103.08053, and
 the GraphChallenge survey, arXiv:2003.09269, treat it), not three separate
 entry points. Each lane registers a *planner* here —
 ``planner(g, options, *, mesh=None) -> plan-like`` where plan-like exposes
-``count()``, ``meta``, and ``prep_seconds`` (a ``TrianglePlan``, or a
-``OneShotPlan`` adapter for the distributed variants) — and the facade
-(``repro.core.api.TriangleCounter``) looks lanes up by name.
+``count()``, ``meta``, and ``prep_seconds`` (normally a ``TrianglePlan``;
+``OneShotPlan`` remains as an adapter for external lanes that wrap a bare
+callable) — and the facade (``repro.core.api.TriangleCounter``) looks lanes
+up by name.
 
 Builtin lanes: the five engine counting lanes ("intersection" / "matrix" /
 "subgraph" / "hash" — TRUST-style per-vertex hash probing — / "bfs" —
 level-ordered forward-edge closure), the dynamic lane ("dynamic"), the
 edge-analytics lane ("edge" — per-edge support and the device k-truss
-peel, ``repro.core.engine.TrussPlan``), and the two ``shard_map``
-distributed variants.
+peel, ``repro.core.engine.TrussPlan``), and the two mesh-planned
+distributed lanes ("intersection_distributed" / "matrix_distributed" —
+first-class ``TrianglePlan``s over dealt shards, see
+``repro.core.distributed``).
 
 ``choose_algorithm(g)`` is the documented heuristic ``algorithm="auto"``
 cost model, anchored to the paper's figures and calibrated on this repo's
@@ -146,8 +149,11 @@ def _default_chooser(g) -> str:
     hands dense-id buckets to the packed-bitmap kernel (see
     ``repro.kernels.intersect.ops``), so lane choice here never needs it.
 
-    Never returns a distributed lane — those need an explicit mesh, so they
-    are opt-in by name.
+    The chooser itself is mesh-blind — it names the *formulation*. When the
+    session carries a multi-device mesh, ``choose_algorithm(g, mesh=mesh)``
+    promotes the pick to the matching distributed lane afterwards (see
+    ``_promote_distributed``), so a sharded session's ``algorithm="auto"``
+    lands on the planned distributed lanes automatically.
     """
     n, m, dmax = g.n, g.m_undirected, g.max_degree
     if n < 3 or m == 0:
@@ -165,11 +171,34 @@ def _default_chooser(g) -> str:
 _CHOOSER: Callable = _default_chooser
 
 
-def choose_algorithm(g) -> str:
+def _promote_distributed(lane: str, mesh) -> str:
+    """Map a chooser's single-host pick to its distributed counterpart when a
+    multi-device mesh is present.
+
+    ``mesh is None`` or a 1-device mesh leaves the pick unchanged (a trivial
+    mesh gains nothing from the psum lanes). Otherwise "matrix" promotes to
+    "matrix_distributed" and every other counting formulation rides the
+    dealt degree-class buckets as "intersection_distributed" (the subgraph /
+    hash / bfs formulations have no sharded build yet — the intersection
+    deal is the closest-cost distributed plan for their graphs). A pick that
+    is already distributed passes through.
+    """
+    if mesh is None or int(mesh.devices.size) <= 1:
+        return lane
+    if lane.endswith("_distributed"):
+        return lane
+    if lane == "matrix":
+        return "matrix_distributed"
+    return "intersection_distributed"
+
+
+def choose_algorithm(g, mesh=None) -> str:
     """Resolve ``algorithm="auto"`` for graph ``g`` via the current chooser
     (the documented ``_default_chooser`` unless ``set_auto_chooser`` swapped
-    it). Always returns a registered single-host lane name."""
-    lane = _CHOOSER(g)
+    it). With a multi-device ``mesh``, the pick is promoted to the matching
+    distributed lane (``_promote_distributed``). Always returns a registered
+    lane name."""
+    lane = _promote_distributed(_CHOOSER(g), mesh)
     _ensure_builtin()
     if lane not in _REGISTRY:
         raise ValueError(

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -51,9 +52,13 @@ __all__ = [
     "DeviceCSR",
     "DeviceGraph",
     "ShapePolicy",
+    "ShardedBucket",
+    "ShardedDeviceCSR",
     "bfs_levels",
+    "deal_across_shards",
     "dynamic_update_step",
     "next_pow2",
+    "shard_valid_counts",
 ]
 
 # Dead slots in a sorted packed-edge-key array (the dynamic lane's edge-set
@@ -685,3 +690,198 @@ class DeviceGraph:
     def __repr__(self) -> str:
         return (f"DeviceGraph(name={self.name!r}, n={self.n}, "
                 f"m_undirected={self.m_undirected}, policy={self.policy})")
+
+
+# ---------------------------------------------------------------------------
+# ShardedDeviceCSR — the 2D (degree-class × shard) edge partition
+# ---------------------------------------------------------------------------
+
+def shard_valid_counts(total: int, num_shards: int) -> np.ndarray:
+    """Real-row count per shard under the round-robin deal.
+
+    Row ``j`` lands on shard ``j % num_shards``, so shard ``s`` owns
+    ``ceil((total - s) / num_shards)`` real rows — counts differ by at most
+    one across shards, which is the static balance guarantee the
+    distributed lanes assert on.
+    """
+    s = np.arange(int(num_shards), dtype=np.int64)
+    return np.maximum(0, (int(total) - s + num_shards - 1) // num_shards) \
+        .astype(np.int32)
+
+
+def deal_across_shards(arr, num_shards: int, rows: int, *, fill):
+    """Round-robin deal of axis 0 into a ``(num_shards, rows, ...)`` stack.
+
+    Shard ``s``, position ``p`` receives input row ``p * num_shards + s``;
+    out-of-range positions are filled with ``fill`` (the caller's padding
+    sentinel). Because upstream schedules are heavy-first ordered (the
+    matrix lane's tile schedule) or same-cost-per-row within a bucket (the
+    degree-class buckets), the deal hands every shard an equal mix of heavy
+    and light work — the multi-device analogue of the paper's
+    TwoSmall/TwoLarge workload grouping. One vectorized device gather; no
+    per-shard host loop.
+    """
+    arr = jnp.asarray(arr)
+    idx = (jnp.arange(int(rows), dtype=jnp.int32)[None, :] * int(num_shards)
+           + jnp.arange(int(num_shards), dtype=jnp.int32)[:, None])
+    out = jnp.take(arr, idx.reshape(-1), axis=0, mode="fill",
+                   fill_value=fill)
+    return out.reshape((int(num_shards), int(rows)) + tuple(arr.shape[1:]))
+
+
+def _deal_chunk(rows: int) -> int:
+    """The length-gating granularity for one sharded bucket: the largest
+    power of two ≤ 64 dividing ``rows`` (pow2-policy extents give 64; odd
+    exact-policy extents degrade gracefully to 1). Padded rows past the
+    last active chunk are never dispatched, and the tail chunk is masked,
+    so padding contributes zero counted work."""
+    rows = int(rows)
+    if rows <= 0:
+        return 1
+    return math.gcd(rows, 64)
+
+
+@dataclasses.dataclass
+class ShardedBucket:
+    """One degree-class bucket dealt round-robin across mesh shards.
+
+    ``u_lists`` / ``v_lists`` are ``(num_shards, rows_per_shard, width)``
+    int32 stacks, sharded over every mesh axis on their leading dim; shard
+    ``s``'s first ``shard_rows[s]`` rows are real, the rest whole-row
+    padding (u = -1 / v = -2). ``valid`` is the same per-shard real-row
+    count as a sharded ``(num_shards,)`` device array — the executables
+    length-gate their chunk loops on it, so padded rows cost nothing.
+    """
+
+    width: int
+    edges: int            # total real rows across all shards
+    rows_per_shard: int   # policy-rounded static per-shard row extent
+    chunk: int            # length-gating granularity (divides rows_per_shard)
+    u_lists: jnp.ndarray  # (num_shards, rows_per_shard, width)
+    v_lists: jnp.ndarray
+    valid: jnp.ndarray    # (num_shards,) int32, sharded like the stacks
+    shard_rows: Tuple[int, ...]  # host copy of ``valid``
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.u_lists.shape[0])
+
+    @property
+    def shape(self) -> tuple:
+        """Per-shard static work-unit shape ``(rows_per_shard, width)`` —
+        the distributed executable-cache key component (the mesh itself is
+        keyed separately)."""
+        return (self.rows_per_shard, self.width)
+
+    def dispatched_rows(self) -> Tuple[int, ...]:
+        """Rows each shard actually dispatches: real rows rounded up to the
+        chunk granularity (the length-gated loop's trip count × chunk)."""
+        c = self.chunk
+        return tuple(int(-(-r // c) * c) if r else 0 for r in self.shard_rows)
+
+
+@dataclasses.dataclass
+class ShardedDeviceCSR:
+    """A graph's degree-class buckets partitioned across a device mesh.
+
+    The 2D edge partition behind the ``*_distributed`` lanes: axis 1 is the
+    paper's degree-class grouping (each bucket one static (rows, width)
+    shape), axis 2 the round-robin deal across the mesh's shards
+    (``deal_across_shards``), so every shard holds an equal dense/sparse
+    mix and the per-shard work imbalance is at most one row per bucket.
+    Built once per plan; the arrays are placed with a ``NamedSharding``
+    over every mesh axis at construction, so counting is pure sharded
+    replay with one scalar ``psum`` per bucket.
+    """
+
+    mesh: object             # jax.sharding.Mesh
+    variant: str
+    buckets: list            # List[ShardedBucket]
+    policy: ShapePolicy
+    n: int
+    edges: int               # total real forward edges across buckets
+
+    @property
+    def num_shards(self) -> int:
+        return int(np.prod(self.mesh.devices.shape))
+
+    def shard_work(self) -> Tuple[int, ...]:
+        """Total dispatched rows per shard, summed over buckets — the
+        balance figure ``meta["shard_work"]`` exposes (max/min ≤ 2× is the
+        documented contract when every shard has work)."""
+        ndev = self.num_shards
+        work = np.zeros(ndev, dtype=np.int64)
+        for b in self.buckets:
+            work += np.asarray(b.dispatched_rows(), dtype=np.int64)
+        return tuple(int(w) for w in work)
+
+    @classmethod
+    def from_buckets(cls, buckets, mesh, *, variant: str,
+                     policy: Optional[ShapePolicy] = None,
+                     n: int = 0) -> "ShardedDeviceCSR":
+        """Deal already-prepped ``DeviceBucket``s across ``mesh``'s shards.
+
+        Each bucket's rows go round-robin to the mesh's flattened shard
+        list; per-shard extents are policy-rounded (so steady-state repeat
+        plans land in identical shape classes) and the stacks are placed
+        with a ``NamedSharding`` over every mesh axis.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        policy = policy if policy is not None else DEFAULT_SHAPE_POLICY
+        ndev = int(np.prod(mesh.devices.shape))
+        axes = tuple(mesh.axis_names)
+        row_sharding = NamedSharding(mesh, PartitionSpec(axes))
+        out = []
+        total = 0
+        for b in buckets:
+            edges = int(b.edges)
+            total += edges
+            rows = policy.round_edges(-(-edges // ndev))
+            chunk = _deal_chunk(rows)
+            u = deal_across_shards(b.u_lists, ndev, rows, fill=-1)
+            v = deal_across_shards(b.v_lists, ndev, rows, fill=-2)
+            valid_h = shard_valid_counts(edges, ndev)
+            u = jax.device_put(u, row_sharding)
+            v = jax.device_put(v, row_sharding)
+            valid = jax.device_put(jnp.asarray(valid_h), row_sharding)
+            out.append(ShardedBucket(
+                width=int(b.width), edges=edges, rows_per_shard=int(rows),
+                chunk=int(chunk), u_lists=u, v_lists=v, valid=valid,
+                shard_rows=tuple(int(x) for x in valid_h),
+            ))
+        return cls(mesh=mesh, variant=variant, buckets=out, policy=policy,
+                   n=int(n), edges=total)
+
+    @classmethod
+    def from_graph(cls, g, mesh, *, variant: str = "filtered",
+                   widths=(8, 32, 128, 512),
+                   policy: Optional[ShapePolicy] = None,
+                   prep_backend: str = "device") -> "ShardedDeviceCSR":
+        """Prep ``g``'s degree-class buckets (device pipeline by default,
+        numpy parity path under ``prep_backend="host"``) and deal them
+        across ``mesh``'s shards."""
+        from repro.core import prep  # deferred: prep imports this module
+
+        policy = policy if policy is not None else DEFAULT_SHAPE_POLICY
+        if prep_backend == "device":
+            buckets = prep.prepare_intersection_buckets_device(
+                g, variant=variant, widths=widths, policy=policy)
+        else:
+            buckets = [
+                prep.DeviceBucket(
+                    width=b["width"], edges=int(b["u_lists"].shape[0]),
+                    u_lists=jnp.asarray(b["u_lists"]),
+                    v_lists=jnp.asarray(b["v_lists"]),
+                    src=jnp.asarray(b["src"]), dst=jnp.asarray(b["dst"]),
+                )
+                for b in prep.prepare_intersection_buckets_host(
+                    g, variant=variant, widths=widths)
+            ]
+        return cls.from_buckets(buckets, mesh, variant=variant,
+                                policy=policy, n=int(g.n))
+
+    def __repr__(self) -> str:
+        return (f"ShardedDeviceCSR(num_shards={self.num_shards}, "
+                f"variant={self.variant!r}, edges={self.edges}, "
+                f"buckets={[(b.shape, b.chunk) for b in self.buckets]})")

@@ -159,33 +159,26 @@ def _lower_cell_inner(arch, shape, mesh, cfg, cell, chips, rec, model):
 
 
 def lower_tc(mesh, *, tiles: int = 8192, block: int = 128) -> dict:
-    """Dry-run the paper core: distributed masked block-SpGEMM TC on the
-    production mesh (synthetic tile schedule, ShapeDtypeStruct only)."""
-    try:
-        from jax import shard_map
-    except ImportError:  # older jax ships it under experimental
-        from jax.experimental.shard_map import shard_map
+    """Dry-run the paper core: the planned ``"matrix_distributed"`` lane on
+    the production mesh — the SAME cached per-shard executable
+    ``plan_triangle_count(g, "matrix_distributed", mesh=mesh)`` binds, here
+    lowered against ShapeDtypeStructs (a synthetic dealt tile schedule, no
+    graph), so the structural check covers exactly what production runs:
+    the length-gated tile loop and the single scalar psum."""
+    from repro.core import engine
 
     chips = mesh.devices.size
     axes = tuple(mesh.axis_names)
     t_per = -(-tiles // chips)
-    shape = (chips * t_per, block, block)
-    spec = P(axes)
-    sh = NamedSharding(mesh, spec)
-    abs_tiles = jax.ShapeDtypeStruct(shape, jnp.float32)
+    sh = NamedSharding(mesh, P(axes))
+    abs_tiles = jax.ShapeDtypeStruct((chips, t_per, block, block),
+                                     jnp.float32, sharding=sh)
+    abs_valid = jax.ShapeDtypeStruct((chips,), jnp.int32, sharding=sh)
 
-    def count(l, u, a):
-        def local(l, u, a):
-            prod = jnp.einsum("tik,tkj->tij", l, u,
-                              preferred_element_type=jnp.float32)
-            return jax.lax.psum((prod * a).sum(), axes)
-
-        return shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
-                         out_specs=P())(l, u, a)
-
+    fn = engine.get_executable("matrix_distributed", "jnp", False,
+                               (t_per, block, block), mesh=mesh)
     t0 = time.time()
-    lowered = jax.jit(count, in_shardings=(sh, sh, sh)).lower(
-        abs_tiles, abs_tiles, abs_tiles)
+    lowered = fn.lower(abs_tiles, abs_tiles, abs_tiles, abs_valid)
     compiled = lowered.compile()
     dt = time.time() - t0
     cost = _cost_dict(compiled)

@@ -13,7 +13,11 @@ writes the ``CALIB_<device>.json`` calibration sidecar this test schema-
 gates alongside ``BENCH_fig_auto.json``), and the ``fig_serve --smoke``
 sweep (service-vs-sequential-facade speedup ≥2×, below-knee zero shed,
 bounded-p99 deadline shedding, and zero steady-state recompiles all
-assert inside the sweep; this test re-reads the gates from the sidecar).
+assert inside the sweep; this test re-reads the gates from the sidecar),
+and the ``fig_dist --smoke`` sweep (the sharded plan/execute engine under
+8 forced host devices in a subprocess: every row oracle-asserted, the
+planned lanes' zero-recompile replays and their speedup over the one-shot
+``shard_map`` baseline re-read from the sidecar).
 All sidecar schemas: rows non-empty and well-formed, env/device/argv
 present, no NaN cells.
 """
@@ -225,6 +229,63 @@ def test_serve_sidecar_speedup_and_shed_contract(fig_serve_sidecar):
 
     assert "recompiles=0" in rows[steady]["derived"]
     assert "plan_cache_hits=" in rows[steady]["derived"]
+
+
+@pytest.fixture(scope="module")
+def fig_dist_sidecar(tmp_path_factory):
+    return _run_smoke_figure(tmp_path_factory, "fig_dist")
+
+
+def test_dist_sidecar_toplevel_schema(fig_dist_sidecar):
+    data = fig_dist_sidecar
+    assert {"figure", "smoke", "argv", "env", "device", "rows"} <= set(data)
+    assert data["figure"] == "fig_dist"
+    assert data["smoke"] is True
+    assert data["argv"][:3] == ["--figures", "fig_dist", "--smoke"]
+    assert {"python", "jax", "numpy", "platform"} <= set(data["env"])
+    assert isinstance(data["device"], str) and data["device"]
+
+
+def test_dist_sidecar_rows_schema(fig_dist_sidecar):
+    rows = fig_dist_sidecar["rows"]
+    assert rows, "fig_dist must emit rows"
+    for row in rows:
+        assert {"name", "prep_us", "count_us", "derived"} <= set(row)
+        assert row["name"].startswith("fig_dist_")
+        for cell in ("prep_us", "count_us"):
+            assert isinstance(row[cell], (int, float))
+            assert not math.isnan(row[cell]) and not math.isinf(row[cell])
+            assert row[cell] >= 0.0
+        assert isinstance(row["derived"], str) and row["derived"]
+
+
+def test_dist_sidecar_planned_beats_oneshot(fig_dist_sidecar):
+    """The sharded-engine acceptance gates, re-read from the sidecar: every
+    row oracle-asserted (inside the subprocess sweep), the single-device
+    reference + the one-shot baseline + both planned 8-shard rows present,
+    the planned rows report zero recompiles across their timed replays,
+    and the planned intersection lane beats the one-shot shard_map
+    baseline on wall time."""
+    rows = {r["name"]: r for r in fig_dist_sidecar["rows"]}
+    single = next((n for n in rows if n.endswith("_single")), None)
+    oneshot = next((n for n in rows if "_oneshot" in n), None)
+    planned = next((n for n in rows if "_planned" in n), None)
+    matrix = next((n for n in rows if "_matrix" in n), None)
+    assert single and oneshot and planned and matrix
+    for name, row in rows.items():
+        assert "oracle=ok" in row["derived"], name
+    assert "devices=1" in rows[single]["derived"]
+    assert "cached=no" in rows[oneshot]["derived"]
+    for n in (planned, matrix):
+        derived = rows[n]["derived"]
+        assert "devices=8" in derived
+        assert "recompiles=0" in derived
+        assert "balance=" in derived
+        balance = float(derived.split("balance=")[1].split(";")[0])
+        assert 1.0 <= balance <= 2.0
+    x = float(rows[planned]["derived"].split("speedup=")[1].split("x")[0])
+    assert x > 1.0
+    assert rows[planned]["count_us"] < rows[oneshot]["count_us"]
 
 
 def test_auto_sidecar_toplevel_schema(fig_auto_run):
