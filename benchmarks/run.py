@@ -69,6 +69,19 @@ Prints ``name,prep_us,count_us,derived`` CSV rows:
                over the one-shot baseline (smoke gate: planned beats
                one-shot) plus the per-shard dealt work.
 
+  fig_tile_*  — beyond-paper: tiled out-of-core streaming — the same graph
+               counted by the monolithic intersection plan and by a plan
+               whose ``max_device_bytes`` budget is forced to a quarter of
+               the largest bucket, so the big buckets stream through
+               chunk-shaped cached executables in ≥2 chunks (``_mono`` /
+               ``_tiled`` row pair). The tiled count must equal the
+               monolithic count AND the scipy oracle bit-exactly, the timed
+               replays assert ZERO executable-cache misses (steady-state
+               streaming never recompiles), and the tiled row's derived
+               field records ``chunks=K;recompiles=0;overhead=<x>`` — the
+               streaming overhead relative to monolithic, gated ≤2× in
+               smoke.
+
   fig_serve_* — beyond-paper: the ``repro.serve`` front end under load — a
                multi-tenant pool of same-policy R-MAT graphs played through
                ``TriangleService`` as (a) the sequential per-request facade
@@ -121,7 +134,8 @@ from repro.graphs import (
 )
 from repro.core import (
     CountOptions, DynamicTriangleCounter, GraphBatch, TriangleCounter,
-    calibrate, save_table, set_default_table, triangle_count_scipy,
+    calibrate, executable_cache_info, save_table, set_default_table,
+    triangle_count_scipy,
 )
 from repro.core.calibrate import calib_path
 from repro.core.engine import get_executable, prepare_intersection_buckets
@@ -897,13 +911,66 @@ def fig_dist(*, ndev: int = 8, scale: int = 8, edge_factor: int = 8,
             f"{min_speedup}x gate"
 
 
+def fig_tile(*, scale: int = 9, edge_factor: int = 8, iters: int = 3,
+             max_overhead: float = 0.0) -> None:
+    """Monolithic vs tiled out-of-core intersection on one R-MAT graph.
+
+    The tiled plan's ``max_device_bytes`` is forced to a quarter of the
+    largest monolithic bucket's resident bytes, so the big buckets stream
+    in ≥2 (typically ≥4) chunks through chunk-shaped cached executables.
+    Asserts bit-identical counts (tiled == monolithic == scipy), ≥2 chunks
+    actually streamed, and ZERO executable-cache misses across the timed
+    replays; gates tiled/monolithic overhead at ``max_overhead`` when
+    non-zero.
+    """
+    g = rmat_graph(scale, edge_factor, seed=5)
+    oracle = int(triangle_count_scipy(g))
+
+    t0 = time.perf_counter()
+    mono = TriangleCounter(g, CountOptions(algorithm="intersection"))
+    res_m = mono.count()
+    mono_prep_us = (time.perf_counter() - t0) * 1e6
+    assert int(res_m) == oracle, (int(res_m), oracle)
+
+    # budget = largest bucket / 4: every bucket above it streams, and the
+    # top bucket streams in ≥4 chunks (pow2 chunk rows round down)
+    bucket_bytes = [int(e) * (8 * int(w) + 8)
+                    for e, w in res_m.meta["bucket_shapes"]]
+    budget = max(bucket_bytes) // 4
+    t0 = time.perf_counter()
+    tiled = TriangleCounter(g, CountOptions(algorithm="intersection",
+                                            max_device_bytes=budget))
+    res_t = tiled.count()
+    tiled_prep_us = (time.perf_counter() - t0) * 1e6
+    assert int(res_t) == oracle, (int(res_t), oracle)
+    chunks = int(res_t.meta["num_chunks"])
+    assert chunks >= 2, res_t.meta
+
+    before = executable_cache_info()["misses"]
+    mono_us = _time(mono.plan.count, iters=iters)
+    tile_us = _time(tiled.plan.count, iters=iters)
+    recompiles = executable_cache_info()["misses"] - before
+    assert recompiles == 0, \
+        f"fig_tile: {recompiles} recompiles during steady-state replays"
+    overhead = tile_us / mono_us
+    _emit("fig_tile_mono", mono_prep_us, mono_us,
+          f"oracle=ok;budget={budget}")
+    _emit("fig_tile_tiled", tiled_prep_us, tile_us,
+          f"oracle=ok;chunks={chunks};recompiles={recompiles};"
+          f"overhead={overhead:.2f}x")
+    if max_overhead:
+        assert overhead <= max_overhead, \
+            f"fig_tile streaming overhead {overhead:.2f}x exceeds the " \
+            f"{max_overhead}x gate"
+
+
 _SMOKE_DATASETS = ["tiny-rmat", "tiny-grid"]
 _SMOKE_SCALES = [7, 8]
 _BATCH_SIZES = (2, 4, 8, 16)
 _SMOKE_BATCH_SIZES = (4, 8)
 
 _FIGURES = ("table1", "fig5", "fig6", "strat", "fig_batch", "fig_truss",
-            "fig_stream", "fig_auto", "fig_serve", "fig_dist")
+            "fig_stream", "fig_auto", "fig_serve", "fig_dist", "fig_tile")
 
 
 def _parse_figures(spec: str):
@@ -978,6 +1045,11 @@ def main() -> None:
             fig_dist(scale=8, edge_factor=8, iters=2, min_speedup=1.0)
         else:
             fig_dist(scale=10, edge_factor=16, iters=3, min_speedup=1.0)
+    if "fig_tile" in figures:
+        if args.smoke:
+            fig_tile(scale=11, edge_factor=8, iters=2, max_overhead=2.0)
+        else:
+            fig_tile(scale=12, edge_factor=16, iters=3)
     _write_json(figures, args.json_dir, args.smoke)
 
 

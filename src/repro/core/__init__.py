@@ -108,6 +108,7 @@ from repro.core.api import (
     TriangleCounter,
     graph_fingerprint,
 )
+from repro.graphs.device import GraphTooLargeError
 from repro.graphs.formats import EdgeUpdate, normalize_edge_updates
 from repro.kernels.intersect.ops import available_strategies
 from repro.core.tc_intersection import (
@@ -148,6 +149,7 @@ __all__ = [
     "DynamicTriangleCounter",
     "DynamicPlan",
     "EdgeUpdate",
+    "GraphTooLargeError",
     "normalize_edge_updates",
     "DEFAULT_INTERPRET",
     "DEFAULT_WIDTHS",

@@ -295,6 +295,12 @@ class TriangleCounter(CounterSession):
         Graphs outside the batchable regime (other lanes under
         ``algorithm="auto"``, pallas backends, host prep) fall back to a
         per-graph session; the session's own graph reuses the session plan.
+        In particular, a multi-device ``mesh`` promotes lanes to their
+        distributed variants, which are NOT batchable — every graph then
+        takes the per-graph fallback (results stay correct, but the one
+        stacked dispatch is lost). That fallback emits a ``UserWarning``
+        once per session; a sharded ``GraphBatch`` is ROADMAP-tracked
+        follow-up work.
         Results come back in input order. Batched results share one
         ``GraphBatch`` as their ``plan`` handle, and their
         ``prep_seconds`` / ``exec_seconds`` are the WHOLE chunk's figures
@@ -339,6 +345,16 @@ class TriangleCounter(CounterSession):
             if self._batchable(lane):
                 batchable.append((pos, g))
             else:
+                if self.mesh is not None and \
+                        not getattr(self, "_warned_mesh_fallback", False):
+                    self._warned_mesh_fallback = True
+                    warnings.warn(
+                        f"count_many: lane {lane!r} under a mesh is not "
+                        f"batchable — counting graph {g.name!r} (and any "
+                        f"other non-batchable member) in a per-graph "
+                        f"session instead of one stacked dispatch; a "
+                        f"sharded GraphBatch is tracked follow-up work",
+                        UserWarning, stacklevel=4)
                 results[pos] = TriangleCounter(
                     g, self.options, mesh=self.mesh
                 ).count()

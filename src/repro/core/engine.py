@@ -99,13 +99,18 @@ from repro.graphs.device import (
     EDGE_KEY_SENTINEL,
     DeviceCSR,
     DeviceGraph,
+    GraphTooLargeError,
     ShapePolicy,
     ShardedDeviceCSR,
     bfs_levels,
     deal_across_shards,
     dynamic_update_step,
+    edge_key_context,
+    edge_key_dtype,
+    edge_key_sentinel,
     fits_int32_pair_keys,
     next_pow2,
+    resolve_edge_key_mode,
     shard_valid_counts,
 )
 from repro.core import prep
@@ -475,15 +480,21 @@ def _build_dynamic_step_executable(shape_key: tuple) -> Callable:
     """One jitted device step applying a padded edge-update batch in place.
 
     ``shape_key`` is ``(cap, ub, n1, width)`` — the packed-key capacity
-    class, padded update rows, n + 1, and the anchor-row width class.
-    All four are :class:`~repro.graphs.device.ShapePolicy` pow2 extents, so
-    a session re-compiles only when an extent overflows its class (and then
-    exactly once: the classes grow monotonically and never shrink). The
-    body is :func:`repro.graphs.device.dynamic_update_step` — resolve the
-    batch against the sorted key orderings, tombstone deletes, merge
-    inserts, and gather the batch's anchor adjacency rows (pre- and
-    post-update) for the delta executables.
+    class, padded update rows, n + 1, and the anchor-row width class —
+    with a trailing ``"wide"`` marker appended in the wide (int64) key
+    mode, so the two key dtypes never share a cache slot.
+    The numeric extents are :class:`~repro.graphs.device.ShapePolicy` pow2
+    classes, so a session re-compiles only when an extent overflows its
+    class (and then exactly once: the classes grow monotonically and never
+    shrink). The body is :func:`repro.graphs.device.dynamic_update_step` —
+    resolve the batch against the sorted key orderings, tombstone deletes,
+    merge inserts, and gather the batch's anchor adjacency rows (pre- and
+    post-update) for the delta executables; the key dtype follows the
+    ``keys`` argument (the caller wraps wide calls in
+    ``edge_key_context``).
     """
+    if shape_key and shape_key[-1] == "wide":
+        shape_key = shape_key[:-1]
     cap, ub, n1, width = (int(x) for x in shape_key)
     del cap, ub  # fixed by the argument shapes; keyed for cache-stats
 
@@ -526,6 +537,8 @@ def _build_delta_executable(strategy: str, bitmap_bits: Optional[int],
     the session's width classes — deliberately capacity-independent (the
     inputs are the step's (ub, width) anchor-row blocks, not the key
     arrays), so a capacity-class overflow recompiles only the step. The
+    wide (int64) key mode appends a trailing ``"wide"`` marker; the packed
+    key dtype itself follows the ``skeys`` argument. The
     executable re-buckets only the anchor
     edges (``prep.delta_update_buckets``), runs the strategy-dispatched
     match mask per class, and for every matched triangle (lo, hi, w) weighs
@@ -541,6 +554,8 @@ def _build_delta_executable(strategy: str, bitmap_bits: Optional[int],
     negative, so padding contributes zero even before the match mask
     gates it.
     """
+    if shape_key and shape_key[-1] == "wide":
+        shape_key = shape_key[:-1]
     ub, n1 = int(shape_key[0]), int(shape_key[1])
     bounds = tuple(int(w) for w in shape_key[2:])
     n = n1 - 1
@@ -549,7 +564,8 @@ def _build_delta_executable(strategy: str, bitmap_bits: Optional[int],
     @jax.jit
     def run(lo_rows, hi_rows, lo_deg, hi_deg, lo, hi, valid, skeys):
         weight = jnp.array([0, 6, 3, 2], jnp.int32)
-        nn1 = jnp.int32(n1)
+        kdt = skeys.dtype  # int32 fast path / int64 wide key mode
+        nn1 = jnp.asarray(n1, kdt)
         total = jnp.int32(0)
         classes = prep.delta_update_buckets(lo_rows, hi_rows, lo_deg,
                                             hi_deg, lo, hi, valid,
@@ -557,10 +573,11 @@ def _build_delta_executable(strategy: str, bitmap_bits: Optional[int],
         for (_, u, v, sb, db), (strat, bits) in zip(classes, resolved):
             matched = intersect_matches(u, v, strategy=strat,
                                         bitmap_bits=bits)
-            s = sb[:, None]
-            d = db[:, None]
-            e1 = jnp.minimum(s, u) * nn1 + jnp.maximum(s, u)
-            e2 = jnp.minimum(d, u) * nn1 + jnp.maximum(d, u)
+            s = sb[:, None].astype(kdt)
+            d = db[:, None].astype(kdt)
+            uk = u.astype(kdt)
+            e1 = jnp.minimum(s, uk) * nn1 + jnp.maximum(s, uk)
+            e2 = jnp.minimum(d, uk) * nn1 + jnp.maximum(d, uk)
             i1 = jnp.clip(jnp.searchsorted(skeys, e1), 0, ub - 1)
             i2 = jnp.clip(jnp.searchsorted(skeys, e2), 0, ub - 1)
             k = (1 + (skeys[i1] == e1).astype(jnp.int32)
@@ -875,6 +892,77 @@ class _Stage:
     # stages only; lets the per-vertex analysis path replay the same buffers
     vertex_args: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
 
+    def run(self):
+        """One device dispatch over the resident buffers."""
+        return self.executable(*self.args)
+
+
+@dataclasses.dataclass
+class _TiledStage:
+    """A bucket too large for the ``max_device_bytes`` budget, streamed
+    through ONE cached chunk-shaped executable instead of held resident.
+
+    The bucket's padded arrays stay in host memory; ``run()`` uploads
+    ``chunk_rows`` rows at a time (tail chunks padded with the repo-wide
+    inert row fills) and accumulates the partial counts on host. Chunk rows
+    are a pow2 class ≤ the bucket extent, so every chunk of every
+    same-width bucket under the same budget shares a single executable —
+    zero steady-state recompiles, cache-stats-asserted in
+    ``tests/test_tiled.py`` — and the count is bit-identical to the
+    monolithic path (integer partials; the matrix lane's float partials are
+    exact integers far below 2^24).
+    """
+
+    executable: Callable
+    host_args: Tuple[np.ndarray, ...]  # full padded bucket, host-resident
+    fills: Tuple[Any, ...]  # tail-chunk fill per host array (inert rows)
+    chunk_rows: int
+    shape_key: tuple  # FULL bucket shape (meta parity with _Stage)
+    chunk_shape_key: tuple  # the executable's shape class
+    strategy: Optional[str] = None
+    bitmap_bits: Optional[int] = None
+    # host (src, dst) for the chunked per-vertex path (filtered stages only)
+    vertex_args: Optional[Tuple[np.ndarray, np.ndarray]] = None
+    float_acc: bool = False  # matrix lane accumulates float partials
+    args: Tuple = ()  # no resident device buffers (block_until_ready no-op)
+
+    @property
+    def rows(self) -> int:
+        return int(self.host_args[0].shape[0])
+
+    @property
+    def num_chunks(self) -> int:
+        return -(-self.rows // self.chunk_rows)
+
+    def _iter_chunks(self, arrays, fills):
+        """Upload successive (chunk_rows, ...) slices, tail-padded to the
+        single chunk shape class."""
+        for s in range(0, self.rows, self.chunk_rows):
+            out = []
+            for a, f in zip(arrays, fills):
+                c = a[s:s + self.chunk_rows]
+                if c.shape[0] < self.chunk_rows:
+                    pad = np.full((self.chunk_rows - c.shape[0],)
+                                  + c.shape[1:], f, a.dtype)
+                    c = np.concatenate([c, pad], axis=0)
+                out.append(jnp.asarray(c))
+            yield tuple(out)
+
+    def run(self):
+        """Stream every chunk through the cached executable; host-side
+        accumulation of the partial counts."""
+        total = 0.0 if self.float_acc else 0
+        for chunk_args in self._iter_chunks(self.host_args, self.fills):
+            r = self.executable(*chunk_args)
+            total += float(r) if self.float_acc else int(r)
+        return total
+
+    def iter_vertex_chunks(self):
+        """Chunked (u, v, src, dst) uploads for the per-vertex path."""
+        assert self.vertex_args is not None
+        return self._iter_chunks(self.host_args + tuple(self.vertex_args),
+                                 self.fills + (0, 0))
+
 
 @dataclasses.dataclass
 class TrianglePlan:
@@ -895,16 +983,18 @@ class TrianglePlan:
     executions: int = 0
 
     def count(self) -> int:
-        """Exact triangle count; pure device replay of the cached stages."""
+        """Exact triangle count; pure device replay of the cached stages
+        (tiled stages stream their bucket chunk-by-chunk through the same
+        cached executables, accumulating partials on host)."""
         if self.algorithm in ("matrix", "matrix_distributed"):
             total_f = 0.0
             for st in self.stages:
-                total_f += float(st.executable(*st.args))
+                total_f += float(st.run())
             total = int(round(total_f))
         else:
             total = 0
             for st in self.stages:
-                total += int(st.executable(*st.args))
+                total += int(st.run())
         if self.divisor != 1:
             assert total % self.divisor == 0, total
             total //= self.divisor
@@ -957,6 +1047,12 @@ class TrianglePlan:
         n_local = int(self.meta.get("vertex_n", self.meta["n"]))
         total = np.zeros(n_local, dtype=np.int64)
         for st in self.stages:
+            if isinstance(st, _TiledStage):
+                e, w = st.chunk_shape_key
+                fn = get_executable("vertex", "jnp", False, (e, w, n_local))
+                for chunk_args in st.iter_vertex_chunks():
+                    total += np.asarray(fn(*chunk_args), dtype=np.int64)
+                continue
             e, w = st.shape_key
             fn = get_executable("vertex", "jnp", False, (e, w, n_local))
             total += np.asarray(fn(*st.args, *st.vertex_args), dtype=np.int64)
@@ -1020,11 +1116,29 @@ def _buckets_for_plan(g, variant: str, widths: Sequence[int],
     ]
 
 
+def _bucket_nbytes(e_pad: int, width: int) -> int:
+    """Device bytes one resident intersection bucket costs: the (e, w)
+    int32 u/v neighbor-list pair plus the (e,) int32 src/dst endpoints."""
+    return int(e_pad) * (8 * int(width) + 8)
+
+
+def _tile_chunk_rows(rows: int, row_bytes: int,
+                     max_device_bytes: int) -> int:
+    """Largest pow2 chunk row count whose device footprint fits the budget
+    (floored at 1 — graceful degradation: a budget below one row's cost
+    still streams row-by-row rather than failing)."""
+    c = 1
+    while c * 2 <= rows and (c * 2) * row_bytes <= max_device_bytes:
+        c *= 2
+    return c
+
+
 def _plan_intersection(g, variant: str, backend: str, interpret: bool,
                        widths: Sequence[int], strategy: str = "auto",
                        bitmap_bits: Optional[int] = None,
                        prep_backend: str = "device",
                        shape_policy: Optional[ShapePolicy] = None,
+                       max_device_bytes: Optional[int] = None,
                        ) -> Tuple[List[_Stage], int, dict]:
     buckets = _buckets_for_plan(g, variant, widths, prep_backend, shape_policy)
     # id range covers real vertex ids [0, n) plus the in-row padding
@@ -1032,10 +1146,38 @@ def _plan_intersection(g, variant: str, backend: str, interpret: bool,
     # negative and never matches in any core
     id_range = g.n + 2
     stages = []
+    tiled_buckets = []
     for b in buckets:
         shape_key = b.shape
         strat, bits = _resolve_bucket_strategy(b.width, id_range, strategy,
                                                bitmap_bits)
+        e_pad, width = int(shape_key[0]), int(shape_key[1])
+        if max_device_bytes is not None \
+                and _bucket_nbytes(e_pad, width) > max_device_bytes:
+            # stream this bucket: host keeps the padded arrays, count()
+            # uploads pow2-row chunks through one chunk-shaped executable
+            chunk = _tile_chunk_rows(e_pad, _bucket_nbytes(1, width),
+                                     max_device_bytes)
+            chunk_key = (chunk, width)
+            fn = get_executable("intersection", backend, interpret,
+                                chunk_key, strategy=strat, bitmap_bits=bits)
+            vertex_args = None
+            if variant == "filtered":
+                vertex_args = (np.asarray(b.src), np.asarray(b.dst))
+            stages.append(_TiledStage(
+                executable=fn,
+                host_args=(np.asarray(b.u_lists), np.asarray(b.v_lists)),
+                fills=(-1, -2),  # whole-row padding: zero matches everywhere
+                chunk_rows=chunk,
+                shape_key=shape_key,
+                chunk_shape_key=chunk_key,
+                strategy=strat,
+                bitmap_bits=bits,
+                vertex_args=vertex_args,
+            ))
+            tiled_buckets.append(dict(shape=shape_key, chunk_rows=chunk,
+                                      num_chunks=stages[-1].num_chunks))
+            continue
         fn = get_executable("intersection", backend, interpret, shape_key,
                             strategy=strat, bitmap_bits=bits)
         vertex_args = None
@@ -1060,27 +1202,59 @@ def _plan_intersection(g, variant: str, backend: str, interpret: bool,
         bucket_strategies=[(s.shape_key[1], s.strategy) for s in stages],
         bucket_edges=[b.edges for b in buckets],
         edges=int(sum(b.edges for b in buckets)),
+        max_device_bytes=max_device_bytes,
+        tiled_buckets=tiled_buckets,
+        num_chunks=int(sum(t["num_chunks"] for t in tiled_buckets)),
     )
     return stages, (6 if variant == "full" else 1), meta
 
 
 def _plan_matrix(g: Graph, block, permute: bool, backend: str,
-                 interpret: bool) -> Tuple[List[_Stage], int, dict]:
+                 interpret: bool,
+                 max_device_bytes: Optional[int] = None,
+                 ) -> Tuple[List[_Stage], int, dict]:
     if block == "auto":
         block = choose_block(g)
     l_sel, u_sel, a_sel, stats = build_tile_schedule(
         g, block=block, permute=permute
     )
     stages = []
+    tiled_buckets = []
     if l_sel.shape[0]:
         shape_key = tuple(l_sel.shape)
-        fn = get_executable("matrix", backend, interpret, shape_key)
-        stages.append(_Stage(
-            executable=fn,
-            args=(jnp.asarray(l_sel), jnp.asarray(u_sel), jnp.asarray(a_sel)),
-            shape_key=shape_key,
-        ))
-    meta = dict(permute=permute, **stats)
+        t, bsz = int(shape_key[0]), int(shape_key[1])
+        # three (T, B, B) float32 stacks resident at once
+        tile_bytes = 3 * bsz * bsz * 4
+        if max_device_bytes is not None \
+                and t * tile_bytes > max_device_bytes:
+            chunk = _tile_chunk_rows(t, tile_bytes, max_device_bytes)
+            chunk_key = (chunk,) + shape_key[1:]
+            fn = get_executable("matrix", backend, interpret, chunk_key)
+            st = _TiledStage(
+                executable=fn,
+                host_args=(np.asarray(l_sel), np.asarray(u_sel),
+                           np.asarray(a_sel)),
+                fills=(0.0, 0.0, 0.0),  # all-zero tiles contribute 0.0
+                chunk_rows=chunk,
+                shape_key=shape_key,
+                chunk_shape_key=chunk_key,
+                float_acc=True,
+            )
+            stages.append(st)
+            tiled_buckets.append(dict(shape=shape_key, chunk_rows=chunk,
+                                      num_chunks=st.num_chunks))
+        else:
+            fn = get_executable("matrix", backend, interpret, shape_key)
+            stages.append(_Stage(
+                executable=fn,
+                args=(jnp.asarray(l_sel), jnp.asarray(u_sel),
+                      jnp.asarray(a_sel)),
+                shape_key=shape_key,
+            ))
+    meta = dict(permute=permute, max_device_bytes=max_device_bytes,
+                tiled_buckets=tiled_buckets,
+                num_chunks=int(sum(t["num_chunks"] for t in tiled_buckets)),
+                **stats)
     return stages, 1, meta
 
 
@@ -1192,6 +1366,7 @@ def _plan_subgraph(g: Graph, backend: str, interpret: bool,
                    bitmap_bits: Optional[int] = None,
                    prep_backend: str = "device",
                    shape_policy: Optional[ShapePolicy] = None,
+                   max_device_bytes: Optional[int] = None,
                    ) -> Tuple[List[_Stage], int, dict]:
     if prep_backend == "device":
         # FILTER + RECONSTRUCT on device: the induced graph keeps original
@@ -1207,6 +1382,7 @@ def _plan_subgraph(g: Graph, backend: str, interpret: bool,
             sub_dg, variant="filtered", backend=backend, interpret=interpret,
             widths=widths, strategy=strategy, bitmap_bits=bitmap_bits,
             prep_backend="device", shape_policy=policy,
+            max_device_bytes=max_device_bytes,
         )
         # the sub-plan's id range is the parent's (ids are preserved)
         meta = dict(
@@ -1226,7 +1402,7 @@ def _plan_subgraph(g: Graph, backend: str, interpret: bool,
     stages, _, inner = _plan_intersection(
         sub, variant="filtered", backend=backend, interpret=interpret,
         widths=widths, strategy=strategy, bitmap_bits=bitmap_bits,
-        prep_backend="host",
+        prep_backend="host", max_device_bytes=max_device_bytes,
     )
     # subgraph stages share the intersection executables by construction
     meta = dict(
@@ -1407,6 +1583,7 @@ def plan_triangle_count(
     bitmap_bits: Optional[int] = None,
     prep_backend: str = "device",
     shape_policy: Optional[ShapePolicy] = None,
+    max_device_bytes: Optional[int] = None,
     mesh=None,
 ) -> TrianglePlan:
     """Run the host stage once and return a device-resident ``TrianglePlan``.
@@ -1441,6 +1618,14 @@ def plan_triangle_count(
         "host" runs the numpy parity path.
       shape_policy: the ``ShapePolicy`` rounding device-prep extents into
         static shape classes; None means ``DEFAULT_SHAPE_POLICY``.
+      max_device_bytes: intersection/subgraph/matrix lanes — optional
+        per-bucket device-bytes budget. Buckets (or the matrix tile stack)
+        whose resident arrays would exceed it are kept host-side and
+        streamed through one cached chunk-shaped executable at ``count()``
+        time (pow2 chunk rows ⇒ monotone shape classes, zero steady-state
+        recompiles; counts bit-identical to monolithic). None (default)
+        plans everything resident. Distributed lanes ignore it — the mesh
+        deal already partitions the working set.
       mesh: jax device mesh — consumed by the ``*_distributed`` lanes only
         (None there defaults to a 1-D mesh over every visible device,
         matching the historical one-shot functions); single-host lanes
@@ -1457,14 +1642,16 @@ def plan_triangle_count(
     if algorithm == "intersection":
         stages, divisor, meta = _plan_intersection(
             g, variant, backend, interpret, widths, strategy, bitmap_bits,
-            prep_backend, shape_policy,
+            prep_backend, shape_policy, max_device_bytes,
         )
     elif algorithm == "matrix":
-        stages, divisor, meta = _plan_matrix(g, block, permute, backend, interpret)
+        stages, divisor, meta = _plan_matrix(g, block, permute, backend,
+                                             interpret, max_device_bytes)
     elif algorithm == "subgraph":
         stages, divisor, meta = _plan_subgraph(g, backend, interpret, widths,
                                                strategy, bitmap_bits,
-                                               prep_backend, shape_policy)
+                                               prep_backend, shape_policy,
+                                               max_device_bytes)
     elif algorithm == "hash":
         stages, divisor, meta = _plan_hash(g, backend, interpret, widths,
                                            prep_backend, shape_policy)
@@ -1585,7 +1772,8 @@ class _EdgeStage:
 
 def _edge_stages(g, *, widths: Sequence[int], strategy: str,
                  bitmap_bits: Optional[int], prep_backend: str,
-                 policy: ShapePolicy, peel_key: tuple, mesh=None):
+                 policy: ShapePolicy, peel_key: tuple, mesh=None,
+                 key_mode: str = "auto"):
     """Build one graph's edge-support stages: prep the filtered buckets (on
     the requested backend), materialize the slot→key addressing structure
     (sorted keys + permutation + forward row_ptr), and bind each bucket to
@@ -1604,14 +1792,16 @@ def _edge_stages(g, *, widths: Sequence[int], strategy: str,
     per bucket combines the partial supports.
     """
     n = g.n
-    prep.check_edge_key_range(n)
+    mode = prep.check_edge_key_range(n, key_mode)
     buckets = _buckets_for_plan(g, "filtered", widths, prep_backend, policy)
     if prep_backend == "device":
         keys, perm, row_ptr, m_edges = prep.forward_edge_keys_device(
-            g, policy=policy)
+            g, policy=policy, key_mode=mode)
     else:
-        keys_h, perm_h, row_ptr_h, m_edges = prep.forward_edge_keys_host(g)
-        keys = jnp.asarray(keys_h, dtype=jnp.int32)
+        keys_h, perm_h, row_ptr_h, m_edges = prep.forward_edge_keys_host(
+            g, mode)
+        with edge_key_context(mode):
+            keys = jnp.asarray(keys_h, dtype=jnp.dtype(edge_key_dtype(mode)))
         perm = jnp.asarray(perm_h, dtype=jnp.int32)
         row_ptr = jnp.asarray(row_ptr_h, dtype=jnp.int32)
     mk, n1 = int(keys.shape[0]), n + 1
@@ -1667,6 +1857,7 @@ def _edge_stages(g, *, widths: Sequence[int], strategy: str,
         bucket_shapes=[s.shape_key[:2] for s in stages],
         bucket_strategies=[(s.shape_key[1], s.strategy) for s in stages],
         bucket_edges=[b.edges for b in buckets],
+        key_mode=mode,
     )
     if mesh is not None:
         meta["mesh"] = mesh_cache_component(mesh)
@@ -1694,7 +1885,7 @@ class TrussPlan:
 
     graph: Graph
     stages: List[_EdgeStage]
-    edge_keys: jnp.ndarray  # (mk,) sorted int32; padding = int32 max
+    edge_keys: jnp.ndarray  # (mk,) sorted keys; padding = key-dtype max
     perm: jnp.ndarray  # (mk,) slot→key-order permutation
     m_edges: int
     widths: Tuple[int, ...]
@@ -1708,6 +1899,7 @@ class TrussPlan:
     prep_seconds: float
     executions: int = 0
     mesh: Any = None  # device mesh when the support stages are sharded
+    key_mode: str = "int32"  # resolved packed-key mode (int32 | wide)
 
     algorithm: str = "edge"
 
@@ -1759,7 +1951,8 @@ class TrussPlan:
         kw = dict(widths=self.widths, strategy=self.strategy,
                   bitmap_bits=self.bitmap_bits,
                   prep_backend=self.prep_backend, policy=self.policy,
-                  peel_key=peel_key, mesh=self.mesh)
+                  peel_key=peel_key, mesh=self.mesh,
+                  key_mode=self.key_mode)
         if start is None:
             stages, keys, perm, m_cur = (self.stages, self.edge_keys,
                                          self.perm, self.m_edges)
@@ -1783,12 +1976,15 @@ class TrussPlan:
                 break
             if self.prep_backend == "device":
                 # re-orient on device: survivors symmetrized through the
-                # jitted sort-based CSR build, then re-prepped
-                lo, hi = keys[:m_cur] // n1, keys[:m_cur] % n1
+                # jitted sort-based CSR build, then re-prepped (decode runs
+                # under the key mode's x64 context; vertex ids fit int32)
+                with edge_key_context(self.key_mode):
+                    lo = (keys[:m_cur] // n1).astype(jnp.int32)
+                    hi = (keys[:m_cur] % n1).astype(jnp.int32)
                 csr = DeviceCSR.from_edges(
                     jnp.concatenate([lo, hi]), jnp.concatenate([hi, lo]),
                     n, valid=jnp.concatenate([keep, keep]),
-                    policy=self.policy,
+                    policy=self.policy, key_mode=self.key_mode,
                 )
                 cur = DeviceGraph(csr, policy=self.policy,
                                   name=self.graph.name + "+peel")
@@ -1886,12 +2082,14 @@ def plan_edge_support(
     max_peel_iters: int = 1000,
     peel_early_exit: bool = True,
     mesh=None,
+    key_mode: str = "auto",
 ) -> TrussPlan:
     """Run the edge lane's prep once and return a replayable ``TrussPlan``.
 
     Args:
-      g: the input ``Graph`` (undirected simple CSR; the packed edge keys
-        need ``(n + 1)² ≤ int32 max``, i.e. n ≲ 46k — larger graphs raise).
+      g: the input ``Graph`` (undirected simple CSR; packed edge keys are
+        int32 while ``(n + 1)² ≤ int32 max`` — n ≲ 46k — and promote to
+        the wide (x64 int64) mode past it under ``key_mode="auto"``).
       widths: degree-class bucket widths (as the intersection lane).
       strategy: per-bucket match-mask core — the mask-specific
         ``resolve_mask_strategy`` cost model: "auto" (bitmap while the id
@@ -1913,6 +2111,11 @@ def plan_edge_support(
         (mk,) supports combine under one vector psum per bucket. Peel
         rounds re-deal the survivor graph over the same mesh. None keeps
         the single-host stages.
+      key_mode: "auto" (int32 keys while they fit, wide int64 past that) |
+        "int32" | "wide" — resolved through the single capacity checkpoint
+        ``repro.graphs.device.resolve_edge_key_mode``, which raises
+        ``GraphTooLargeError`` when the requested mode cannot represent
+        the graph.
 
     Returns:
       A ``TrussPlan`` exposing ``edge_support()`` / ``k_truss(k)`` /
@@ -1930,6 +2133,7 @@ def plan_edge_support(
         g, widths=tuple(widths), strategy=strategy, bitmap_bits=bitmap_bits,
         prep_backend=prep_backend, policy=policy,
         peel_key=(max_peel_iters, peel_early_exit), mesh=mesh,
+        key_mode=key_mode,
     )
     meta = dict(
         graph=g.name,
@@ -1961,6 +2165,7 @@ def plan_edge_support(
         meta=meta,
         prep_seconds=prep_seconds,
         mesh=mesh,
+        key_mode=bucket_meta["key_mode"],
     )
 
 
@@ -1981,8 +2186,10 @@ class DynamicPlan:
     """Device state + cached executables for one dynamic-graph session.
 
     The plan owns a mutable device-resident edge set — two sorted
-    orderings of packed int32 keys, ``lo * (n + 1) + hi`` and
-    ``hi * (n + 1) + lo``, with ``EDGE_KEY_SENTINEL`` in dead slots; the
+    orderings of packed keys, ``lo * (n + 1) + hi`` and
+    ``hi * (n + 1) + lo`` (int32 when ``(n + 1)² ≤ int32 max``, else
+    x64-gated int64 "wide" keys), with the mode's sentinel in dead
+    slots; the
     orderings ARE the adjacency (any vertex's neighbor row is two
     contiguous runs) — and maintains the exact triangle count
     incrementally across batched
@@ -2019,15 +2226,14 @@ class DynamicPlan:
                  bitmap_bits: Optional[int] = None,
                  shape_policy: Optional[ShapePolicy] = None,
                  update_batch_size: int = 256,
-                 recount_interval: int = 64):
+                 recount_interval: int = 64,
+                 key_mode: str = "auto"):
         if backend not in ("jnp", "pallas", "ref"):
             raise ValueError(f"unknown backend {backend!r}; "
                              f"expected 'jnp', 'pallas', or 'ref'")
-        if not fits_int32_pair_keys(g.n):
-            raise ValueError(
-                f"the dynamic lane packs undirected edges into int32 "
-                f"(lo, hi) keys, which needs (n + 1)² ≤ int32 max; "
-                f"n={g.n} is too large")
+        self.key_mode = resolve_edge_key_mode(g.n, key_mode, lane="dynamic")
+        self._sentinel = int(edge_key_sentinel(self.key_mode))
+        self._key_dtype = edge_key_dtype(self.key_mode)
         update_batch_size = int(update_batch_size)
         recount_interval = int(recount_interval)
         if update_batch_size < 1:
@@ -2063,14 +2269,15 @@ class DynamicPlan:
         self.m = int(lo.shape[0])
         self.cap = self.policy.round_edges(self.m)
         n1 = self.n + 1
-        host_keys = np.full(self.cap, EDGE_KEY_SENTINEL, np.int64)
+        host_keys = np.full(self.cap, self._sentinel, np.int64)
         host_keys[: self.m] = np.sort(
             lo.astype(np.int64) * n1 + hi.astype(np.int64))
-        self._keys = jnp.asarray(host_keys.astype(np.int32))
-        host_rkeys = np.full(self.cap, EDGE_KEY_SENTINEL, np.int64)
+        host_rkeys = np.full(self.cap, self._sentinel, np.int64)
         host_rkeys[: self.m] = np.sort(
             hi.astype(np.int64) * n1 + lo.astype(np.int64))
-        self._rkeys = jnp.asarray(host_rkeys.astype(np.int32))
+        with edge_key_context(self.key_mode):
+            self._keys = jnp.asarray(host_keys.astype(self._key_dtype))
+            self._rkeys = jnp.asarray(host_rkeys.astype(self._key_dtype))
         self.batches = 0
         self.inserted = 0
         self.deleted = 0
@@ -2078,12 +2285,13 @@ class DynamicPlan:
         self.executions = 0
         # prime: one all-padding step compiles this shape class
         self._apply_step(
-            np.full(self.ub, EDGE_KEY_SENTINEL, np.int64),
-            np.full(self.ub, EDGE_KEY_SENTINEL, np.int64),
+            np.full(self.ub, self._sentinel, np.int64),
+            np.full(self.ub, self._sentinel, np.int64),
             np.zeros(self.ub, bool), np.zeros(self.ub, bool))
         self._count = self._full_recount()
         self.meta = dict(
             graph=self.name, n=self.n, m=self.m,
+            key_mode=self.key_mode,
             widths=self.widths, strategy=self.strategy,
             shape_policy=self.policy.key(),
             update_batch_size=self.update_batch_size,
@@ -2120,21 +2328,28 @@ class DynamicPlan:
         new_cap = self.policy.round_edges(needed)
         if new_cap <= self.cap:  # pragma: no cover - rounding is monotone
             raise AssertionError("capacity growth must be monotone")
-        pad = jnp.full(new_cap - self.cap, EDGE_KEY_SENTINEL, jnp.int32)
-        self._keys = jnp.concatenate([self._keys, pad])
-        self._rkeys = jnp.concatenate([self._rkeys, pad])
+        with edge_key_context(self.key_mode):
+            pad = jnp.full(new_cap - self.cap, self._sentinel,
+                           self._keys.dtype)
+            self._keys = jnp.concatenate([self._keys, pad])
+            self._rkeys = jnp.concatenate([self._rkeys, pad])
         self.cap = new_cap
 
     # -- cached executables -------------------------------------------------
 
     def _step_executable(self) -> Callable:
+        # wide mode appends a trailing marker so int32 sessions keep their
+        # exact historical cache keys (the builder strips it)
+        wide = ("wide",) if self.key_mode == "wide" else ()
         return get_executable(
             "dynamic_step", "jnp", False,
-            (self.cap, self.ub, self.n + 1, int(self.bounds[-1])))
+            (self.cap, self.ub, self.n + 1, int(self.bounds[-1])) + wide)
 
     def _delta_executable(self) -> Callable:
+        wide = ("wide",) if self.key_mode == "wide" else ()
         return get_executable(
-            "delta", "jnp", False, (self.ub, self.n + 1) + self.bounds,
+            "delta", "jnp", False,
+            (self.ub, self.n + 1) + self.bounds + wide,
             strategy=self.strategy, bitmap_bits=self.bitmap_bits)
 
     # -- update path --------------------------------------------------------
@@ -2142,11 +2357,12 @@ class DynamicPlan:
     def _apply_step(self, upd_keys: np.ndarray, upd_rkeys: np.ndarray,
                     upd_ins: np.ndarray, upd_valid: np.ndarray):
         """Run one padded device step and return its full output tuple."""
-        return self._step_executable()(
-            self._keys, self._rkeys,
-            jnp.asarray(upd_keys.astype(np.int32)),
-            jnp.asarray(upd_rkeys.astype(np.int32)),
-            jnp.asarray(upd_ins), jnp.asarray(upd_valid))
+        with edge_key_context(self.key_mode):
+            return self._step_executable()(
+                self._keys, self._rkeys,
+                jnp.asarray(upd_keys.astype(self._key_dtype)),
+                jnp.asarray(upd_rkeys.astype(self._key_dtype)),
+                jnp.asarray(upd_ins), jnp.asarray(upd_valid))
 
     def apply_updates(self, lo: np.ndarray, hi: np.ndarray,
                       insert: np.ndarray) -> dict:
@@ -2179,9 +2395,9 @@ class DynamicPlan:
         if self.m + n_ins_req > self.cap:
             self._grow_capacity(self.m + n_ins_req)
         n1 = self.n + 1
-        upd_keys = np.full(self.ub, EDGE_KEY_SENTINEL, np.int64)
+        upd_keys = np.full(self.ub, self._sentinel, np.int64)
         upd_keys[:nu] = lo_c.astype(np.int64) * n1 + hi_c.astype(np.int64)
-        upd_rkeys = np.full(self.ub, EDGE_KEY_SENTINEL, np.int64)
+        upd_rkeys = np.full(self.ub, self._sentinel, np.int64)
         upd_rkeys[:nu] = hi_c.astype(np.int64) * n1 + lo_c.astype(np.int64)
         upd_ins = np.zeros(self.ub, bool)
         upd_ins[:nu] = ins_c
@@ -2198,8 +2414,10 @@ class DynamicPlan:
         # (launched before the stats sync; the old rows fit the old class)
         (_, _, eff_ins, eff_del, ins_skeys, del_skeys,
          old_lr, old_hr, old_ld, old_hd, _, _, _, _, st) = step_out
-        sum_del = self._delta_executable()(
-            old_lr, old_hr, old_ld, old_hd, d_lo, d_hi, eff_del, del_skeys)
+        with edge_key_context(self.key_mode):
+            sum_del = self._delta_executable()(
+                old_lr, old_hr, old_ld, old_hd, d_lo, d_hi, eff_del,
+                del_skeys)
         # one small sync: the step stats drive the (rare) width growth
         m_new, dmax_new, n_ins, n_del = (int(x) for x in np.asarray(st))
         if self._maybe_grow_width(dmax_new):
@@ -2213,10 +2431,12 @@ class DynamicPlan:
         (new_keys, new_rkeys, eff_ins, eff_del, ins_skeys, del_skeys,
          _, _, _, _, new_lr, new_hr, new_ld, new_hd, st) = step_out
         # Δ⁺: insert-anchored triangles against the POST-update adjacency
-        sum_ins = self._delta_executable()(
-            new_lr, new_hr, new_ld, new_hd, d_lo, d_hi, eff_ins, ins_skeys)
-        sdel, sins = (int(x) for x in
-                      np.asarray(jnp.stack([sum_del, sum_ins])))
+        with edge_key_context(self.key_mode):
+            sum_ins = self._delta_executable()(
+                new_lr, new_hr, new_ld, new_hd, d_lo, d_hi, eff_ins,
+                ins_skeys)
+        sdel = int(np.asarray(sum_del))
+        sins = int(np.asarray(sum_ins))
         if sdel % 6 or sins % 6:
             raise RuntimeError(
                 f"dynamic delta drift on {self.name!r}: weighted anchor "
@@ -2275,7 +2495,7 @@ class DynamicPlan:
     def snapshot(self) -> Graph:
         """Materialize the current device edge set as a host ``Graph``."""
         keys = np.asarray(self._keys).astype(np.int64)
-        keys = keys[keys != EDGE_KEY_SENTINEL]
+        keys = keys[keys != self._sentinel]
         lo, hi = _decode_edge_keys(keys, self.n + 1)
         return edges_to_csr(lo, hi, n=self.n, name=self.name + "+dynamic")
 
@@ -2303,12 +2523,14 @@ def plan_dynamic_count(
     shape_policy: Optional[ShapePolicy] = None,
     update_batch_size: int = 256,
     recount_interval: int = 64,
+    key_mode: str = "auto",
 ) -> DynamicPlan:
     """Open a dynamic-graph counting session seeded from ``g``.
 
     Args:
-      g: the seed ``Graph`` (may be empty; packed edge keys need
-        ``(n + 1)² ≤ int32 max``, i.e. n ≲ 46k — larger graphs raise).
+      g: the seed ``Graph`` (may be empty). Graphs past the int32 packed
+        pair-key bound (n ≳ 46k) automatically promote to the x64-gated
+        int64 "wide" key mode; see ``key_mode``.
       backend / interpret / widths / strategy / bitmap_bits / shape_policy:
         as the intersection lane — they configure both the delta
         executables and the periodic full recount.
@@ -2316,6 +2538,10 @@ def plan_dynamic_count(
         chunked. Padded to a policy extent (the "update rows" class).
       recount_interval: run the full-recount parity oracle every this many
         batches (0 disables it; ``recount()`` is always available).
+      key_mode: packed-key representation — ``"auto"`` (int32 when it
+        fits, else wide), ``"int32"`` (raise ``GraphTooLargeError`` past
+        the bound), or ``"wide"`` (force int64 keys). Resolved by
+        :func:`repro.graphs.device.resolve_edge_key_mode`.
 
     Returns:
       A ``DynamicPlan``; the facade surfaces it as
@@ -2326,7 +2552,7 @@ def plan_dynamic_count(
         g, backend=backend, interpret=interpret, widths=widths,
         strategy=strategy, bitmap_bits=bitmap_bits,
         shape_policy=shape_policy, update_batch_size=update_batch_size,
-        recount_interval=recount_interval)
+        recount_interval=recount_interval, key_mode=key_mode)
 
 
 def _dynamic_planner(g: Graph, options, *, mesh=None) -> DynamicPlan:

@@ -24,7 +24,11 @@ import dataclasses
 import os
 from typing import Optional, Tuple, Union
 
-from repro.graphs.device import DEFAULT_SHAPE_POLICY, ShapePolicy
+from repro.graphs.device import (
+    DEFAULT_SHAPE_POLICY,
+    EDGE_KEY_MODES,
+    ShapePolicy,
+)
 
 __all__ = [
     "BACKENDS",
@@ -123,6 +127,22 @@ class CountOptions:
         every this many applied update batches and assert the incremental
         count matches bit-exactly (the drift assertion). 0 disables the
         periodic oracle (``recount()`` stays available on demand).
+      key_mode: packed-edge-key capacity mode for the lanes that address
+        vertex pairs as ``a * (n + 1) + b`` keys (edge/k-truss, dynamic,
+        ``DeviceCSR.from_edges``): "auto" (default) takes the int32 fast
+        path while ``fits_int32_pair_keys(n)`` holds and promotes to the
+        wide (x64 int64) mode past it; "int32" forces the fast path
+        (raising ``GraphTooLargeError`` past the bound); "wide" forces
+        int64 keys. See ``repro.graphs.device.resolve_edge_key_mode`` —
+        the repo's single capacity checkpoint.
+      max_device_bytes: optional per-bucket device-bytes budget for the
+        intersection/subgraph/matrix lanes. ``None`` (default) plans every
+        bucket monolithically; an int budget makes the engine STREAM any
+        bucket whose device arrays would exceed it through the same cached
+        executables chunk-by-chunk (pow2 chunk rows ⇒ monotone chunk shape
+        classes, zero steady-state recompiles), accumulating partial counts
+        on host — graceful degradation instead of OOM. Counts are
+        bit-identical to the monolithic path.
 
     Frozen ⇒ hashable: equal options hash equal, and the engine's
     executable-cache keys are functions of these fields, so equal options
@@ -147,6 +167,8 @@ class CountOptions:
     peel_early_exit: bool = True
     update_batch_size: int = 256
     recount_interval: int = 64
+    key_mode: str = "auto"
+    max_device_bytes: Optional[int] = None
 
     def __post_init__(self):
         # normalize widths to a tuple of ints so the dataclass stays hashable
@@ -245,6 +267,18 @@ class CountOptions:
                 f"recount_interval must be a non-negative int (0 disables "
                 f"the periodic oracle), got {self.recount_interval!r}"
             )
+        if self.key_mode not in EDGE_KEY_MODES:
+            raise ValueError(
+                f"unknown key_mode {self.key_mode!r}; expected one of "
+                f"{EDGE_KEY_MODES}"
+            )
+        if self.max_device_bytes is not None:
+            b = self.max_device_bytes
+            if not isinstance(b, int) or isinstance(b, bool) or b < 1:
+                raise ValueError(
+                    f"max_device_bytes must be None or a positive int, "
+                    f"got {b!r}"
+                )
 
     @property
     def resolved_interpret(self) -> bool:
@@ -269,7 +303,7 @@ class CountOptions:
             self.prep_backend, self.resolved_shape_policy.key(),
             self.max_peel_iters, self.peel_early_exit,
             self.update_batch_size, self.recount_interval,
-            self.chooser,
+            self.chooser, self.key_mode, self.max_device_bytes,
         )
 
     def replace(self, **changes) -> "CountOptions":
@@ -288,30 +322,35 @@ class CountOptions:
                         interpret=self.interpret, widths=self.widths,
                         strategy=self.strategy, bitmap_bits=self.bitmap_bits,
                         prep_backend=self.prep_backend,
-                        shape_policy=self.shape_policy)
+                        shape_policy=self.shape_policy,
+                        max_device_bytes=self.max_device_bytes)
         if lane == "subgraph":
             return dict(backend=self.backend, interpret=self.interpret,
                         widths=self.widths, strategy=self.strategy,
                         bitmap_bits=self.bitmap_bits,
                         prep_backend=self.prep_backend,
-                        shape_policy=self.shape_policy)
+                        shape_policy=self.shape_policy,
+                        max_device_bytes=self.max_device_bytes)
         if lane == "matrix":
             return dict(backend=self.backend, interpret=self.interpret,
-                        block=self.block, permute=self.permute)
+                        block=self.block, permute=self.permute,
+                        max_device_bytes=self.max_device_bytes)
         if lane == "edge":
             return dict(widths=self.widths, strategy=self.strategy,
                         bitmap_bits=self.bitmap_bits,
                         prep_backend=self.prep_backend,
                         shape_policy=self.shape_policy,
                         max_peel_iters=self.max_peel_iters,
-                        peel_early_exit=self.peel_early_exit)
+                        peel_early_exit=self.peel_early_exit,
+                        key_mode=self.key_mode)
         if lane == "dynamic":
             return dict(backend=self.backend, interpret=self.interpret,
                         widths=self.widths, strategy=self.strategy,
                         bitmap_bits=self.bitmap_bits,
                         shape_policy=self.shape_policy,
                         update_batch_size=self.update_batch_size,
-                        recount_interval=self.recount_interval)
+                        recount_interval=self.recount_interval,
+                        key_mode=self.key_mode)
         if lane == "hash":
             return dict(backend=self.backend, interpret=self.interpret,
                         widths=self.widths,

@@ -64,7 +64,11 @@ from repro.graphs.device import (
     _induced_compact_dev,
     _sorted_edge_keys_dev,
     _two_core_peel_dev,
+    edge_key_context,
+    edge_key_dtype,
+    edge_key_sentinel,
     fits_int32_pair_keys,
+    resolve_edge_key_mode,
 )
 from repro.core.options import DEFAULT_WIDTHS
 
@@ -253,29 +257,29 @@ def delta_update_buckets(lo_rows: jnp.ndarray, hi_rows: jnp.ndarray,
     return out
 
 
-def check_edge_key_range(n: int) -> None:
-    """Guard the edge lane's packed (lo, hi) keys against int32 overflow.
+def check_edge_key_range(n: int, key_mode: str = "auto", *,
+                         lane: str = "edge-support") -> str:
+    """Resolve the edge lane's packed-key mode for a graph.
 
     The edge-support executables address undirected edges through sorted
-    ``lo * (n + 1) + hi`` keys — the same ``fits_int32_pair_keys`` bound as
-    ``DeviceCSR.from_edges``, which the k-truss peel uses to rebuild the
-    graph each round.
+    ``lo * (n + 1) + hi`` keys — int32 on the ``fits_int32_pair_keys`` fast
+    path, wide (x64 int64) past it. Delegates to the repo's single capacity
+    checkpoint, ``repro.graphs.device.resolve_edge_key_mode``.
+
+    Returns:
+      The resolved concrete key mode: "int32" or "wide".
 
     Raises:
-      ValueError: when ``(n + 1)²`` exceeds the int32 range (n > ~46k).
+      GraphTooLargeError: the requested mode cannot represent the graph.
     """
-    if not fits_int32_pair_keys(n):
-        raise ValueError(
-            f"the edge-support lane packs undirected edges into int32 "
-            f"(lo, hi) keys, which needs (n+1)^2 ≤ int32 max; n={n} is too "
-            f"large (use repro.core.listing's host enumeration path instead)"
-        )
+    return resolve_edge_key_mode(n, key_mode, lane=lane)
 
 
 def forward_edge_keys_device(
     g: Union[Graph, DeviceGraph],
     *,
     policy: Optional[ShapePolicy] = None,
+    key_mode: str = "auto",
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, int]:
     """The edge lane's undirected-edge addressing structure, on device.
 
@@ -286,49 +290,59 @@ def forward_edge_keys_device(
     conversion to the canonical order: each slot's packed
     ``min·(n+1)+max`` key, sorted (= ``edge_list_unique``'s (lo, hi) lex
     order), plus the sort permutation mapping sorted positions back to
-    slots. Padding slots carry the int32 max sentinel and sort to the end.
+    slots. Padding slots carry the key-dtype max sentinel and sort to the
+    end.
 
     Args:
       g: a host ``Graph`` (uploaded once) or an existing ``DeviceGraph``.
       policy: extent-rounding policy (ignored when ``g`` is a
         ``DeviceGraph``, which carries its own).
+      key_mode: "auto" promotes int32 keys to wide (int64) keys past
+        ``fits_int32_pair_keys``; "int32"/"wide" force a mode.
 
     Returns:
-      (keys, perm, row_ptr, m): the (mk_pad,) sorted int32 keys, the
-      (mk_pad,) slot permutation (``supp_slots[perm]`` is support in key
-      order), the forward (n+1,) row_ptr the executables scatter through,
-      and the true undirected edge count occupying the leading key slots.
+      (keys, perm, row_ptr, m): the (mk_pad,) sorted keys (int32 or int64
+      per the resolved mode), the (mk_pad,) slot permutation
+      (``supp_slots[perm]`` is support in key order), the forward (n+1,)
+      row_ptr the executables scatter through, and the true undirected edge
+      count occupying the leading key slots.
     """
     dg = _as_device_graph(g, policy)
-    check_edge_key_range(dg.n)
+    mode = check_edge_key_range(dg.n, key_mode)
+    kdt = edge_key_dtype(mode)
     if dg.m == 0:
         mk = dg.policy.round_edges(0)
-        return (jnp.full(mk, jnp.iinfo(jnp.int32).max, jnp.int32),
-                jnp.arange(mk, dtype=jnp.int32),
-                jnp.zeros(dg.n + 1, jnp.int32), 0)
+        with edge_key_context(mode):
+            return (jnp.full(mk, edge_key_sentinel(mode), jnp.dtype(kdt)),
+                    jnp.arange(mk, dtype=jnp.int32),
+                    jnp.zeros(dg.n + 1, jnp.int32), 0)
     fwd = dg.forward()
-    keys, perm = _sorted_edge_keys_dev(fwd.src, fwd.dst, fwd.kvalid,
-                                       n1=dg.n + 1)
+    with edge_key_context(mode):
+        keys, perm = _sorted_edge_keys_dev(fwd.src, fwd.dst, fwd.kvalid,
+                                           n1=dg.n + 1,
+                                           wide=(mode == "wide"))
     return keys, perm, fwd.row_ptr, dg.m // 2
 
 
-def forward_edge_keys_host(g: Graph) -> Tuple[np.ndarray, np.ndarray,
-                                              np.ndarray, int]:
+def forward_edge_keys_host(
+    g: Graph, key_mode: str = "auto",
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
     """Numpy parity path of ``forward_edge_keys_device``.
 
     Host slots are the oriented DAG's CSR positions (``orient_forward``),
     so keys per slot need an explicit lex sort into (lo, hi) order.
 
     Returns:
-      (keys, perm, row_ptr, m): unpadded (m,) sorted int32 keys, the (m,)
-      slot permutation, the oriented (n+1,) row_ptr, and m itself.
+      (keys, perm, row_ptr, m): unpadded (m,) sorted keys (int32 fast path,
+      int64 wide mode), the (m,) slot permutation, the oriented (n+1,)
+      row_ptr, and m itself.
     """
-    check_edge_key_range(g.n)
+    mode = check_edge_key_range(g.n, key_mode)
     dag = orient_forward(g)
     src, dst = dag.edge_endpoints()
     lo = np.minimum(src, dst).astype(np.int64)
     hi = np.maximum(src, dst).astype(np.int64)
-    key = (lo * (g.n + 1) + hi).astype(np.int32)
+    key = (lo * (g.n + 1) + hi).astype(edge_key_dtype(mode))
     perm = np.argsort(key, kind="stable").astype(np.int32)
     return key[perm], perm, dag.row_ptr.astype(np.int32), int(key.shape[0])
 

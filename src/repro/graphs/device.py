@@ -35,6 +35,7 @@ padding uses ``n`` (u side) / ``n + 1`` (v side); whole padding rows use
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import math
@@ -43,28 +44,52 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.experimental import enable_x64 as _enable_x64
 
 from repro.graphs.formats import Graph
 
 __all__ = [
     "DEFAULT_SHAPE_POLICY",
     "EDGE_KEY_SENTINEL",
+    "WIDE_EDGE_KEY_SENTINEL",
     "DeviceCSR",
     "DeviceGraph",
+    "GraphTooLargeError",
     "ShapePolicy",
     "ShardedBucket",
     "ShardedDeviceCSR",
     "bfs_levels",
     "deal_across_shards",
     "dynamic_update_step",
+    "edge_key_context",
+    "edge_key_dtype",
+    "edge_key_sentinel",
+    "fits_int32_pair_keys",
     "next_pow2",
+    "resolve_edge_key_mode",
     "shard_valid_counts",
 ]
 
 # Dead slots in a sorted packed-edge-key array (the dynamic lane's edge-set
 # container) carry this value, so they sort past every real lo*(n+1)+hi key
-# (real keys are < (n+1)^2 <= int32 max by fits_int32_pair_keys).
+# (real keys are < (n+1)^2 <= int32 max by fits_int32_pair_keys). The wide
+# (int64) key mode uses WIDE_EDGE_KEY_SENTINEL the same way; prefer
+# ``edge_key_sentinel(mode)`` over the raw constants.
 EDGE_KEY_SENTINEL: int = int(np.iinfo(np.int32).max)
+WIDE_EDGE_KEY_SENTINEL: int = int(np.iinfo(np.int64).max)
+
+#: Valid values for every ``key_mode`` parameter in the repo.
+EDGE_KEY_MODES: Tuple[str, ...] = ("auto", "int32", "wide")
+
+
+class GraphTooLargeError(ValueError):
+    """The graph exceeds a lane's packed-edge-key capacity.
+
+    Raised from the single checkpoint :func:`resolve_edge_key_mode` when a
+    graph cannot be represented in the requested key mode: either
+    ``key_mode="int32"`` was forced past ``fits_int32_pair_keys`` (n ≲ 46k),
+    or n is so large that even int64 keys would overflow (n ≳ 3e9). The
+    message names the lanes/modes that *do* support the graph."""
 
 
 def next_pow2(x: int) -> int:
@@ -74,11 +99,84 @@ def next_pow2(x: int) -> int:
 
 
 def fits_int32_pair_keys(n: int) -> bool:
-    """Whether ``(n + 1)²`` fits the int32 range — the single bound behind
-    every packed ``a * (n + 1) + b`` vertex-pair key in the repo
+    """Whether ``(n + 1)²`` fits the int32 range — the bound behind the fast
+    path of every packed ``a * (n + 1) + b`` vertex-pair key in the repo
     (``DeviceCSR.from_edges`` sort keys, the edge lane's undirected-edge
-    keys). x64 is off by default, so keys are 32-bit; n ≲ 46k."""
+    keys). x64 is off by default, so int32 keys are the fast path; past
+    n ≲ 46k the key layer promotes to the wide (x64 int64) mode — see
+    :func:`resolve_edge_key_mode`."""
     return (n + 1) ** 2 <= np.iinfo(np.int32).max
+
+
+def fits_int64_pair_keys(n: int) -> bool:
+    """Whether ``(n + 1)²`` fits the int64 range (n ≲ 3e9) — the hard bound
+    of the wide key mode, i.e. the only n bound the hardware imposes."""
+    return (n + 1) ** 2 <= np.iinfo(np.int64).max
+
+
+def resolve_edge_key_mode(n: int, key_mode: str = "auto", *,
+                          lane: str = "edge") -> str:
+    """THE capacity checkpoint: resolve a requested key mode for a graph.
+
+    Every packed-pair-key construction site in the repo routes its capacity
+    decision through here (grep-audited in ``tests/test_capacity.py``), so
+    there is exactly one place that can raise :class:`GraphTooLargeError`
+    and no site can silently overflow.
+
+    Args:
+      n: vertex count.
+      key_mode: "auto" (int32 when it fits, else wide), "int32" (force the
+        fast path; raises past the bound), or "wide" (force x64 int64 keys).
+      lane: name used in error messages ("edge", "dynamic", ...).
+
+    Returns:
+      The resolved concrete mode: "int32" or "wide".
+
+    Raises:
+      GraphTooLargeError: ``key_mode="int32"`` past ``fits_int32_pair_keys``,
+        or n past ``fits_int64_pair_keys`` in any mode.
+    """
+    if key_mode not in EDGE_KEY_MODES:
+        raise ValueError(
+            f"key_mode must be one of {EDGE_KEY_MODES}, got {key_mode!r}"
+        )
+    if not fits_int64_pair_keys(n):
+        raise GraphTooLargeError(
+            f"the {lane} lane packs vertex pairs into (n+1)-radix keys and "
+            f"(n+1)^2 overflows even int64 for n={n}; no key mode supports "
+            f"this graph (the matrix / hash / bfs lanes use no packed keys "
+            f"and remain available)"
+        )
+    if fits_int32_pair_keys(n):
+        return "wide" if key_mode == "wide" else "int32"
+    if key_mode == "int32":
+        raise GraphTooLargeError(
+            f"the {lane} lane was forced to key_mode='int32' but "
+            f"(n+1)^2 > int32 max for n={n} (the int32 fast path needs "
+            f"n <= 46339); use key_mode='auto' or 'wide' for this graph, "
+            f"or the matrix / hash / bfs lanes, which use no packed keys"
+        )
+    return "wide"
+
+
+def edge_key_dtype(mode: str) -> np.dtype:
+    """Host/device dtype of packed edge keys in a resolved key mode."""
+    return np.dtype(np.int64) if mode == "wide" else np.dtype(np.int32)
+
+
+def edge_key_sentinel(mode: str) -> int:
+    """Dead-slot sentinel (dtype max) of a resolved key mode."""
+    return WIDE_EDGE_KEY_SENTINEL if mode == "wide" else EDGE_KEY_SENTINEL
+
+
+def edge_key_context(mode: str):
+    """Context manager every wide-mode device computation runs under.
+
+    jax demotes int64 results to int32 whenever an op runs outside an
+    ``enable_x64`` scope — even on arrays created inside one — so BOTH the
+    trace and every call of a wide-key executable must be wrapped. The
+    int32 fast path gets a no-op context, keeping call sites uniform."""
+    return _enable_x64() if mode == "wide" else contextlib.nullcontext()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,30 +240,33 @@ def _edge_sources(row_ptr: jnp.ndarray, *, n: int, m_pad: int) -> jnp.ndarray:
     return jnp.clip(src, 0, max(n - 1, 0)).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "m_pad"))
+@functools.partial(jax.jit, static_argnames=("n", "m_pad", "wide"))
 def _csr_from_edges(src: jnp.ndarray, dst: jnp.ndarray, valid: jnp.ndarray,
-                    *, n: int, m_pad: int):
+                    *, n: int, m_pad: int, wide: bool = False):
     """Sort-based CSR build from a (possibly unsorted, masked) edge list.
 
     Assumes the valid (src, dst) pairs are deduplicated directed edges.
     Invalid slots sort to the end. Returns (row_ptr, col_idx, m) where
     ``col_idx`` is padded with the sentinel ``n`` and ``m`` is the valid
-    edge count (a device scalar). Keys are int32 (x64 is off by default),
-    so the caller guards ``(n + 1)² ≤ int32 max``.
+    edge count (a device scalar). Sort keys (and the ``row_starts`` probe
+    vector) are int32 on the fast path and int64 when ``wide`` — the caller
+    resolves the mode through ``resolve_edge_key_mode`` and wraps wide
+    calls in ``edge_key_context``.
     """
-    big = jnp.iinfo(jnp.int32).max
+    kdt = jnp.int64 if wide else jnp.int32
+    big = jnp.asarray(np.iinfo(np.int64 if wide else np.int32).max, kdt)
     key = jnp.where(
         valid,
-        src.astype(jnp.int32) * jnp.int32(n + 1) + dst.astype(jnp.int32),
-        jnp.int32(big),
+        src.astype(kdt) * jnp.asarray(n + 1, kdt) + dst.astype(kdt),
+        big,
     )
     order = jnp.argsort(key)
     skey = key[order]
     m = valid.sum()
     col = jnp.where(jnp.arange(m_pad) < m, dst[order], n).astype(jnp.int32)
-    row_starts = jnp.arange(n + 1, dtype=jnp.int32) * jnp.int32(n + 1)
+    row_starts = jnp.arange(n + 1, dtype=kdt) * jnp.asarray(n + 1, kdt)
     row_ptr = jnp.searchsorted(skey, row_starts, side="left").astype(jnp.int32)
-    return row_ptr, col, m
+    return row_ptr, col, m.astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "m_pad", "mf_pad"))
@@ -265,28 +366,33 @@ def _gather_bucket_dev(sorted_src: jnp.ndarray, sorted_dst: jnp.ndarray,
     return u, v, sb, db
 
 
-@functools.partial(jax.jit, static_argnames=("n1",))
+@functools.partial(jax.jit, static_argnames=("n1", "wide"))
 def _sorted_edge_keys_dev(src: jnp.ndarray, dst: jnp.ndarray,
-                          valid: jnp.ndarray, *, n1: int):
+                          valid: jnp.ndarray, *, n1: int,
+                          wide: bool = False):
     """Sorted packed keys of a masked undirected edge list, plus the sort
     permutation.
 
     Each live slot's key is ``min(src, dst) * n1 + max(src, dst)`` (``n1`` =
     n + 1, so keys of distinct edges are distinct and ascending keys are
     ascending (lo, hi) pairs — the same order as a host
-    ``edge_list_unique``). Dead slots take the int32 max sentinel and sort
-    to the end, so the leading ``valid.sum()`` entries are the real edges.
-    Returns ``(sorted_keys, perm)`` with ``sorted_keys = keys[perm]`` —
-    ``perm`` maps sorted-key positions back to edge slots, which is how the
-    engine reorders its slot-indexed support vectors into key order. The
-    caller guards ``(n + 1)² ≤ int32 max`` (keys are 32-bit, x64 off).
+    ``edge_list_unique``). Dead slots take the key-dtype max sentinel and
+    sort to the end, so the leading ``valid.sum()`` entries are the real
+    edges. Returns ``(sorted_keys, perm)`` with ``sorted_keys = keys[perm]``
+    — ``perm`` maps sorted-key positions back to edge slots, which is how
+    the engine reorders its slot-indexed support vectors into key order.
+    Keys are int32 on the fast path, int64 when ``wide`` (the caller
+    resolves the mode through ``resolve_edge_key_mode`` and wraps wide
+    calls in ``edge_key_context``).
     """
-    lo = jnp.minimum(src, dst).astype(jnp.int32)
-    hi = jnp.maximum(src, dst).astype(jnp.int32)
-    key = jnp.where(valid, lo * jnp.int32(n1) + hi,
-                    jnp.int32(jnp.iinfo(jnp.int32).max))
+    kdt = jnp.int64 if wide else jnp.int32
+    lo = jnp.minimum(src, dst).astype(kdt)
+    hi = jnp.maximum(src, dst).astype(kdt)
+    key = jnp.where(valid, lo * jnp.asarray(n1, kdt) + hi,
+                    jnp.asarray(np.iinfo(np.int64 if wide else np.int32).max,
+                                kdt))
     perm = jnp.argsort(key)
-    return key[perm], perm
+    return key[perm], perm.astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
@@ -400,17 +506,19 @@ def _anchor_rows(keys: jnp.ndarray, rkeys: jnp.ndarray, verts: jnp.ndarray,
     first yields a globally ascending row (the probe/bitmap cores require
     sorted rows) padded with the in-row sentinel ``n``. Invalid anchors get
     all-padding rows and degree 0. Returns ``(rows (B, width), deg (B,))``.
+    Key dtype (int32 fast path / int64 wide mode) follows ``keys``.
     """
     cap = int(keys.shape[0])
-    n1 = jnp.int32(n + 1)
-    v = jnp.clip(verts, 0, max(n - 1, 0)).astype(jnp.int32)
+    kdt = keys.dtype
+    n1 = jnp.asarray(n + 1, kdt)
+    v = jnp.clip(verts, 0, max(n - 1, 0)).astype(kdt)
     base = v * n1
-    # run boundaries: all of v's keys lie in [v*n1, v*n1 + n) and the fits
-    # check ((n+1)^2 <= int32 max) keeps v*n1 + n in range
+    # run boundaries: all of v's keys lie in [v*n1, v*n1 + n) and the
+    # resolve_edge_key_mode checkpoint keeps v*n1 + n in the key range
     sf = jnp.searchsorted(keys, base)
-    ef = jnp.searchsorted(keys, base + jnp.int32(n))
+    ef = jnp.searchsorted(keys, base + jnp.asarray(n, kdt))
     sr = jnp.searchsorted(rkeys, base)
-    er = jnp.searchsorted(rkeys, base + jnp.int32(n))
+    er = jnp.searchsorted(rkeys, base + jnp.asarray(n, kdt))
     df = jnp.where(valid, ef - sf, 0)
     dr = jnp.where(valid, er - sr, 0)
     lanes = jnp.arange(width, dtype=jnp.int32)[None, :]
@@ -429,10 +537,11 @@ def dynamic_update_step(keys: jnp.ndarray, rkeys: jnp.ndarray,
     """One traced step of the dynamic lane: apply a batched edge update to
     the device-resident edge set in place.
 
-    The edge set is kept in TWO sorted orderings of packed int32 keys —
-    ``keys`` by ``lo*(n+1)+hi`` and ``rkeys`` by ``hi*(n+1)+lo`` — each
-    with capacity ``keys.shape[0]`` (a ``ShapePolicy`` pow2 class) and
-    ``EDGE_KEY_SENTINEL`` in dead slots. Together the two orderings ARE the
+    The edge set is kept in TWO sorted orderings of packed keys (int32 fast
+    path / int64 wide mode, dtype follows ``keys``) — ``keys`` by
+    ``lo*(n+1)+hi`` and ``rkeys`` by ``hi*(n+1)+lo`` — each with capacity
+    ``keys.shape[0]`` (a ``ShapePolicy`` pow2 class) and the key-dtype max
+    sentinel in dead slots. Together the two orderings ARE the
     adjacency structure: any vertex's neighbor row is two contiguous runs,
     so per-batch work stays O(batch) gathers plus two capacity-length
     sorts — no O(n·width) CSR / neighbor-matrix rebuild per step. The step:
@@ -471,8 +580,11 @@ def dynamic_update_step(keys: jnp.ndarray, rkeys: jnp.ndarray,
       num_deleted]`` int32, the step's single host-sync payload.
     """
     cap = int(keys.shape[0])
-    sent = jnp.int32(EDGE_KEY_SENTINEL)
-    n1 = jnp.int32(n + 1)
+    kdt = keys.dtype
+    sent = jnp.asarray(
+        WIDE_EDGE_KEY_SENTINEL if kdt == jnp.int64 else EDGE_KEY_SENTINEL,
+        kdt)
+    n1 = jnp.asarray(n + 1, kdt)
     # -- resolve: which requests take effect against the current set
     idx = jnp.clip(jnp.searchsorted(keys, upd_keys), 0, cap - 1)
     present = (keys[idx] == upd_keys) & upd_valid
@@ -504,7 +616,7 @@ def dynamic_update_step(keys: jnp.ndarray, rkeys: jnp.ndarray,
     del ub
     # -- degrees of the new state: two n-query boundary scans
     live = (new_keys != sent).sum().astype(jnp.int32)
-    bnds = jnp.arange(n, dtype=jnp.int32) * n1
+    bnds = jnp.arange(n, dtype=kdt) * n1
     sf = jnp.searchsorted(new_keys, bnds)
     sr = jnp.searchsorted(new_rkeys, bnds)
     deg = (jnp.diff(jnp.append(sf, live)) + jnp.diff(jnp.append(sr, live)))
@@ -559,7 +671,8 @@ class DeviceCSR:
 
     @classmethod
     def from_edges(cls, src, dst, n: int, *, valid=None,
-                   policy: ShapePolicy = DEFAULT_SHAPE_POLICY) -> "DeviceCSR":
+                   policy: ShapePolicy = DEFAULT_SHAPE_POLICY,
+                   key_mode: str = "auto") -> "DeviceCSR":
         """Jitted sort-based CSR build from deduplicated directed edges.
 
         Args:
@@ -568,30 +681,30 @@ class DeviceCSR:
           n: vertex count (static).
           valid: optional bool mask of live slots (padding slots excluded).
           policy: extent-rounding policy for the uploaded arrays.
+          key_mode: "auto" promotes the int32 sort keys to wide (int64)
+            keys past ``fits_int32_pair_keys``; "int32"/"wide" force a mode.
 
         Returns:
           A ``DeviceCSR`` whose rows are sorted by destination id.
 
         Raises:
-          ValueError: when ``(n + 1)²`` exceeds the int32 sort-key range
-            (n > ~46k; x64 is off by default, so keys are 32-bit).
+          GraphTooLargeError: the resolved key mode cannot represent the
+            graph (see :func:`resolve_edge_key_mode`).
         """
-        if not fits_int32_pair_keys(n):
-            raise ValueError(
-                f"DeviceCSR.from_edges sort keys need (n+1)^2 ≤ int32 max; "
-                f"n={n} is too large (use edges_to_csr + from_graph instead)"
-            )
-        src = jnp.asarray(src, dtype=jnp.int32)
-        dst = jnp.asarray(dst, dtype=jnp.int32)
-        if valid is None:
-            valid = jnp.ones(src.shape[0], dtype=bool)
-        m_pad = policy.round_edges(int(src.shape[0]))
-        pad = m_pad - int(src.shape[0])
-        if pad:
-            src = jnp.concatenate([src, jnp.zeros(pad, jnp.int32)])
-            dst = jnp.concatenate([dst, jnp.zeros(pad, jnp.int32)])
-            valid = jnp.concatenate([valid, jnp.zeros(pad, dtype=bool)])
-        row_ptr, col, m = _csr_from_edges(src, dst, valid, n=n, m_pad=m_pad)
+        mode = resolve_edge_key_mode(n, key_mode, lane="csr-build")
+        with edge_key_context(mode):
+            src = jnp.asarray(src, dtype=jnp.int32)
+            dst = jnp.asarray(dst, dtype=jnp.int32)
+            if valid is None:
+                valid = jnp.ones(src.shape[0], dtype=bool)
+            m_pad = policy.round_edges(int(src.shape[0]))
+            pad = m_pad - int(src.shape[0])
+            if pad:
+                src = jnp.concatenate([src, jnp.zeros(pad, jnp.int32)])
+                dst = jnp.concatenate([dst, jnp.zeros(pad, jnp.int32)])
+                valid = jnp.concatenate([valid, jnp.zeros(pad, dtype=bool)])
+            row_ptr, col, m = _csr_from_edges(
+                src, dst, valid, n=n, m_pad=m_pad, wide=(mode == "wide"))
         return cls(n=int(n), m=int(m), row_ptr=row_ptr, col_idx=col)
 
 

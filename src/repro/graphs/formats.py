@@ -100,8 +100,10 @@ def normalize_edge_updates(
     keep = lo != hi  # drop self loops
     lo, hi, flag = lo[keep], hi[keep], flag[keep]
     if lo.size:
-        # last-wins dedup: reverse, keep first occurrence per key, restore order
-        key = lo * (n + 1) + hi
+        # last-wins dedup: reverse, keep first occurrence per key, restore
+        # order; int64 host arithmetic — overflow-free for every n whose ids
+        # fit int32, no capacity checkpoint needed
+        key = lo.astype(np.int64) * (n + 1) + hi
         _, first_rev = np.unique(key[::-1], return_index=True)
         idx = np.sort(key.shape[0] - 1 - first_rev)
         lo, hi, flag = lo[idx], hi[idx], flag[idx]

@@ -252,6 +252,32 @@ def test_count_many_matches_per_graph_loop():
     assert results[0].plan is tc.plan
 
 
+def test_count_many_mesh_fallback_warns_and_stays_correct():
+    """Pin the documented mesh behavior (the sharded-GraphBatch baseline):
+    distributed lanes are NOT batchable, so ``count_many`` under a mesh
+    falls back to per-graph sessions — one ``UserWarning`` per session,
+    results still exact. A 1-device mesh keeps this in-process (promotion
+    only kicks in on multi-device meshes, but an explicit distributed
+    algorithm exercises the same fallback path)."""
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
+    batch = [rmat_graph(7, 6, seed=s) for s in (11, 12)]
+    tc = TriangleCounter(
+        batch[0], CountOptions(algorithm="intersection_distributed"),
+        mesh=mesh)
+    with pytest.warns(UserWarning, match="not\\s+batchable"):
+        results = tc.count_many(batch)
+    for g, res in zip(batch, results):
+        assert res == triangle_count_scipy(g), g.name
+        assert res.meta.get("batched") is None  # per-graph, not stacked
+    # the warning fires once per session, not once per graph/chunk
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        again = tc.count_many(batch)
+    assert [int(r) for r in again] == [int(r) for r in results]
+
+
 # --- per-vertex analysis through the cached plan ----------------------------
 
 @pytest.mark.parametrize("opts", [

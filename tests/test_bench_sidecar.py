@@ -18,6 +18,11 @@ and the ``fig_dist --smoke`` sweep (the sharded plan/execute engine under
 8 forced host devices in a subprocess: every row oracle-asserted, the
 planned lanes' zero-recompile replays and their speedup over the one-shot
 ``shard_map`` baseline re-read from the sidecar).
+The ``fig_tile --smoke`` sweep (tiled out-of-core streaming: the tiled
+count asserts bit-identical parity against the monolithic plan AND the
+scipy oracle in-process, ≥2 streamed chunks, zero steady-state recompiles,
+and the ≤2× overhead gate; the tests below re-read those gates from the
+sidecar).
 All sidecar schemas: rows non-empty and well-formed, env/device/argv
 present, no NaN cells.
 """
@@ -286,6 +291,53 @@ def test_dist_sidecar_planned_beats_oneshot(fig_dist_sidecar):
     x = float(rows[planned]["derived"].split("speedup=")[1].split("x")[0])
     assert x > 1.0
     assert rows[planned]["count_us"] < rows[oneshot]["count_us"]
+
+
+@pytest.fixture(scope="module")
+def fig_tile_sidecar(tmp_path_factory):
+    return _run_smoke_figure(tmp_path_factory, "fig_tile")
+
+
+def test_tile_sidecar_toplevel_schema(fig_tile_sidecar):
+    data = fig_tile_sidecar
+    assert {"figure", "smoke", "argv", "env", "device", "rows"} <= set(data)
+    assert data["figure"] == "fig_tile"
+    assert data["smoke"] is True
+    assert data["argv"][:3] == ["--figures", "fig_tile", "--smoke"]
+    assert {"python", "jax", "numpy", "platform"} <= set(data["env"])
+    assert isinstance(data["device"], str) and data["device"]
+
+
+def test_tile_sidecar_rows_schema(fig_tile_sidecar):
+    rows = fig_tile_sidecar["rows"]
+    assert rows, "fig_tile must emit rows"
+    for row in rows:
+        assert {"name", "prep_us", "count_us", "derived"} <= set(row)
+        assert row["name"].startswith("fig_tile_")
+        for cell in ("prep_us", "count_us"):
+            assert isinstance(row[cell], (int, float))
+            assert not math.isnan(row[cell]) and not math.isinf(row[cell])
+            assert row[cell] >= 0.0
+        assert isinstance(row["derived"], str) and row["derived"]
+
+
+def test_tile_sidecar_streaming_contract(fig_tile_sidecar):
+    """The out-of-core acceptance gates, re-read from the sidecar: a
+    _mono/_tiled row pair, both oracle-asserted (inside the sweep), the
+    tiled row streamed ≥2 chunks with ZERO steady-state recompiles, and
+    its overhead over the monolithic replay stays within the 2× smoke
+    gate the sweep already enforced in-process."""
+    rows = {r["name"]: r for r in fig_tile_sidecar["rows"]}
+    assert "fig_tile_mono" in rows and "fig_tile_tiled" in rows
+    for row in rows.values():
+        assert "oracle=ok" in row["derived"], row
+    assert "budget=" in rows["fig_tile_mono"]["derived"]
+    derived = rows["fig_tile_tiled"]["derived"]
+    chunks = int(derived.split("chunks=")[1].split(";")[0])
+    assert chunks >= 2
+    assert "recompiles=0" in derived
+    overhead = float(derived.split("overhead=")[1].rstrip("x"))
+    assert 0.0 < overhead <= 2.0
 
 
 def test_auto_sidecar_toplevel_schema(fig_auto_run):

@@ -1,0 +1,359 @@
+"""The n≲46k capacity-bug class is dead: key modes, boundaries, the audit.
+
+Packed pair keys ``a * (n + 1) + b`` overflow int32 once
+``(n + 1)² > 2³¹ − 1`` — the flip sits exactly between n = 46339 (last
+fitting) and n = 46340 (first wide). This module pins the whole capacity
+layer introduced to kill that bug class:
+
+* ``resolve_edge_key_mode`` — the ONE checkpoint: auto promotion to the
+  x64-gated int64 "wide" mode at the flip, forced ``int32`` past the bound
+  raising the typed ``GraphTooLargeError`` (a ``ValueError`` naming the
+  lanes that DO support the graph), forced ``wide`` below it honored.
+* Boundary regressions at n = 46339/46340/46341 through the real lanes,
+  plus the ``EDGE_KEY_SENTINEL`` non-collision proof at the boundary
+  (max real key ``(n + 1)² − 1`` < sentinel on the last fitting n).
+* n > 46341 counting correctly end to end — the static intersection lane
+  and a dynamic session with updates + the full-recount oracle, both in
+  wide mode, scipy-asserted.
+* Wide-vs-int32 parity: the SAME graph forced through both key modes must
+  agree bit-for-bit on every lane that packs keys (edge/k-truss, dynamic),
+  including a seeded-rng soak; a hypothesis twin runs when the plugin is
+  installed.
+* The source audit: every ``* (n + 1)`` packed-key construction site in
+  the library lives in a file that routes through the checkpoint, and the
+  checkpoint is the only ``raise GraphTooLargeError`` site.
+"""
+
+import pathlib
+import re
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CountOptions,
+    DynamicTriangleCounter,
+    GraphTooLargeError,
+    TriangleCounter,
+    plan_dynamic_count,
+    plan_edge_support,
+    triangle_count_scipy,
+)
+from repro.core import prep
+from repro.graphs import (
+    edges_to_csr,
+    erdos_renyi_graph,
+    fits_int32_pair_keys,
+    resolve_edge_key_mode,
+)
+from repro.graphs.device import (
+    EDGE_KEY_SENTINEL,
+    WIDE_EDGE_KEY_SENTINEL,
+    DeviceCSR,
+    edge_key_dtype,
+    edge_key_sentinel,
+    fits_int64_pair_keys,
+)
+from repro.graphs.formats import EdgeUpdate
+
+# the exact int32 flip: (46339 + 1)² = 2_147_395_600 ≤ 2³¹ − 1 < (46340 + 1)²
+N_LAST_INT32 = 46339
+
+
+def _sparse_graph(n, m=200, seed=0, name="boundary"):
+    """A few edges spread over a huge id range — triangles guaranteed by
+    an explicit clique on the top three ids (the overflow-prone corner)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=m).astype(np.int64)
+    dst = rng.integers(0, n, size=m).astype(np.int64)
+    keep = src != dst
+    tri = np.array([[n - 3, n - 2], [n - 2, n - 1], [n - 3, n - 1]])
+    lo = np.concatenate([src[keep], tri[:, 0]])
+    hi = np.concatenate([dst[keep], tri[:, 1]])
+    return edges_to_csr(lo, hi, n=n, name=name)
+
+
+# -- the checkpoint -----------------------------------------------------------
+
+def test_fits_predicates_flip_exactly_at_the_boundary():
+    assert fits_int32_pair_keys(N_LAST_INT32)
+    assert not fits_int32_pair_keys(N_LAST_INT32 + 1)
+    assert fits_int64_pair_keys(N_LAST_INT32 + 1)
+    assert fits_int64_pair_keys(3_000_000_000)
+    assert not fits_int64_pair_keys(4_000_000_000)
+
+
+def test_resolve_edge_key_mode_auto_promotes_at_the_flip():
+    assert resolve_edge_key_mode(N_LAST_INT32) == "int32"
+    assert resolve_edge_key_mode(N_LAST_INT32 + 1) == "wide"
+    assert resolve_edge_key_mode(N_LAST_INT32 + 2) == "wide"
+
+
+def test_resolve_edge_key_mode_forced_modes():
+    # forcing wide below the bound is honored (parity-test hook)
+    assert resolve_edge_key_mode(100, "wide") == "wide"
+    assert resolve_edge_key_mode(100, "int32") == "int32"
+    with pytest.raises(ValueError, match="key_mode"):
+        resolve_edge_key_mode(100, "int16")
+
+
+def test_forced_int32_past_the_bound_raises_typed_error_naming_lanes():
+    with pytest.raises(GraphTooLargeError) as ei:
+        resolve_edge_key_mode(N_LAST_INT32 + 1, "int32", lane="edge")
+    msg = str(ei.value)
+    # the message must route the user somewhere that works
+    assert "wide" in msg and "auto" in msg
+    assert "matrix" in msg or "hash" in msg
+    assert isinstance(ei.value, ValueError)  # typed AND catchable as before
+
+
+def test_past_int64_bound_raises_even_on_auto():
+    with pytest.raises(GraphTooLargeError) as ei:
+        resolve_edge_key_mode(4_000_000_000)
+    assert "matrix" in str(ei.value) or "hash" in str(ei.value)
+
+
+def test_mode_helpers_are_consistent():
+    assert edge_key_dtype("int32") == np.dtype(np.int32)
+    assert edge_key_dtype("wide") == np.dtype(np.int64)
+    assert edge_key_sentinel("int32") == EDGE_KEY_SENTINEL
+    assert edge_key_sentinel("wide") == WIDE_EDGE_KEY_SENTINEL
+
+
+def test_sentinel_never_collides_with_a_real_key_at_the_boundary():
+    """On the LAST fitting n the maximum real packed key is
+    (n + 1)² − 1; the int32 sentinel must sit strictly above it (and the
+    wide sentinel above the int64 bound's maximum key)."""
+    max_real = (N_LAST_INT32 + 1) ** 2 - 1
+    assert max_real < EDGE_KEY_SENTINEL
+    assert EDGE_KEY_SENTINEL == np.iinfo(np.int32).max
+    n_last_wide = 3_037_000_498  # isqrt(2⁶³ − 1) − 1
+    assert fits_int64_pair_keys(n_last_wide)
+    assert not fits_int64_pair_keys(n_last_wide + 1)
+    assert (n_last_wide + 1) ** 2 - 1 < WIDE_EDGE_KEY_SENTINEL
+
+
+# -- boundary regressions through the real lanes ------------------------------
+
+@pytest.mark.parametrize("n", [N_LAST_INT32, N_LAST_INT32 + 1,
+                               N_LAST_INT32 + 2])
+def test_boundary_counts_are_exact_on_every_side_of_the_flip(n):
+    g = _sparse_graph(n, seed=n)
+    oracle = int(triangle_count_scipy(g))
+    assert oracle >= 1  # the planted clique survived dedup
+    res = TriangleCounter(g, CountOptions(algorithm="intersection")).count()
+    assert int(res) == oracle
+    # the key-packing lane (edge support) promotes transparently
+    sup = plan_edge_support(g)
+    want = "int32" if fits_int32_pair_keys(n) else "wide"
+    assert sup.key_mode == want
+
+
+@pytest.mark.parametrize("n", [N_LAST_INT32, N_LAST_INT32 + 1])
+def test_boundary_dynamic_sessions_promote_and_stay_exact(n):
+    g = _sparse_graph(n, seed=n)
+    oracle = int(triangle_count_scipy(g))
+    dt = DynamicTriangleCounter(g, CountOptions(recount_interval=0))
+    want = "int32" if fits_int32_pair_keys(n) else "wide"
+    assert dt.plan.key_mode == want
+    assert dt.plan._keys.dtype == edge_key_dtype(want)
+    assert int(dt.count()) == oracle
+    # touch the overflow-prone corner: update edges among the top ids
+    ups = [EdgeUpdate(n - 5, n - 4, True), EdgeUpdate(n - 4, n - 3, True),
+           EdgeUpdate(n - 5, n - 3, True), EdgeUpdate(n - 3, n - 2, False)]
+    dt.apply_updates(ups)
+    assert dt.plan.recount() == int(dt.count())
+    snap = dt.plan.snapshot()
+    assert int(dt.count()) == int(triangle_count_scipy(snap))
+
+
+def test_forced_int32_past_the_bound_raises_from_the_lanes():
+    g = _sparse_graph(N_LAST_INT32 + 1, seed=1)
+    with pytest.raises(GraphTooLargeError):
+        plan_edge_support(g, key_mode="int32")
+    with pytest.raises(GraphTooLargeError):
+        plan_dynamic_count(g, key_mode="int32")
+    with pytest.raises(GraphTooLargeError):
+        prep.check_edge_key_range(g.n, "int32")
+
+
+def test_large_graph_counts_exact_in_wide_mode():
+    """The acceptance bar: n well past 46341 counts correctly via the
+    intersection AND dynamic lanes (wide keys), scipy-asserted."""
+    g = erdos_renyi_graph(50_000, avg_degree=4.0, seed=3)
+    oracle = int(triangle_count_scipy(g))
+    res = TriangleCounter(g, CountOptions(algorithm="intersection")).count()
+    assert int(res) == oracle
+    dt = DynamicTriangleCounter(g, CountOptions(recount_interval=0))
+    assert dt.plan.key_mode == "wide"
+    assert int(dt.count()) == oracle
+    rng = np.random.default_rng(7)
+    pairs = rng.integers(0, g.n, size=(64, 2))
+    ups = [EdgeUpdate(int(a), int(b), True) for a, b in pairs if a != b]
+    dt.apply_updates(ups)
+    assert dt.plan.recount() == int(dt.count())
+
+
+def test_device_csr_promotes_past_the_bound():
+    g = _sparse_graph(N_LAST_INT32 + 1, seed=2)
+    lo, hi = g.edge_list_unique()
+    d = DeviceCSR.from_edges(lo, hi, g.n)
+    assert int(d.m) == g.m_undirected
+    with pytest.raises(GraphTooLargeError):
+        DeviceCSR.from_edges(lo, hi, g.n, key_mode="int32")
+
+
+# -- wide-vs-int32 parity on graphs where both modes fit ----------------------
+
+def _mode_counts(g):
+    out = {}
+    for mode in ("int32", "wide"):
+        opts = CountOptions(algorithm="edge", key_mode=mode)
+        out[mode] = int(TriangleCounter(g, opts).count())
+    return out
+
+
+def test_wide_mode_parity_small_graph():
+    g = erdos_renyi_graph(300, avg_degree=8.0, seed=11)
+    counts = _mode_counts(g)
+    assert counts["int32"] == counts["wide"] == int(triangle_count_scipy(g))
+
+
+def test_wide_mode_parity_dynamic_stream():
+    g = erdos_renyi_graph(200, avg_degree=6.0, seed=5)
+    rng = np.random.default_rng(13)
+    pairs = rng.integers(0, g.n, size=(120, 2))
+    ins = rng.random(120) < 0.7
+    ups = [EdgeUpdate(int(a), int(b), bool(i))
+           for (a, b), i in zip(pairs, ins) if a != b]
+    counts = {}
+    for mode in ("int32", "wide"):
+        dt = DynamicTriangleCounter(
+            g, CountOptions(key_mode=mode, recount_interval=0))
+        dt.apply_updates(ups)
+        dt.plan.recount()
+        counts[mode] = int(dt.count())
+    assert counts["int32"] == counts["wide"]
+
+
+def test_wide_mode_parity_rng_soak():
+    """The always-running numpy-rng twin of the hypothesis sweep below:
+    random sparse graphs forced through both key modes must agree with
+    each other and the oracle on the edge lane and a k-truss peel."""
+    rng = np.random.default_rng(99)
+    for trial in range(6):
+        n = int(rng.integers(20, 400))
+        m = int(rng.integers(10, 4 * n))
+        src = rng.integers(0, n, size=m)
+        dst = rng.integers(0, n, size=m)
+        keep = src != dst
+        if not keep.any():
+            continue
+        g = edges_to_csr(src[keep], dst[keep], n=n, name=f"soak{trial}")
+        oracle = int(triangle_count_scipy(g))
+        counts = _mode_counts(g)
+        assert counts["int32"] == counts["wide"] == oracle, trial
+        k32 = plan_edge_support(g, key_mode="int32").k_truss(3)
+        kw = plan_edge_support(g, key_mode="wide").k_truss(3)
+        assert k32.m_undirected == kw.m_undirected, trial
+
+
+def test_wide_mode_parity_hypothesis():
+    """Property form of the soak (runs when hypothesis is installed)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(
+        n=st.integers(min_value=8, max_value=300),
+        edges=st.lists(st.tuples(st.integers(0, 299), st.integers(0, 299)),
+                       min_size=1, max_size=200),
+    )
+    @hyp.settings(max_examples=25, deadline=None)
+    def check(n, edges):
+        lo = np.array([a % n for a, b in edges])
+        hi = np.array([b % n for a, b in edges])
+        keep = lo != hi
+        hyp.assume(keep.any())
+        g = edges_to_csr(lo[keep], hi[keep], n=n, name="hyp")
+        counts = _mode_counts(g)
+        assert counts["int32"] == counts["wide"] \
+            == int(triangle_count_scipy(g))
+
+    check()
+
+
+# -- the source audit ---------------------------------------------------------
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+
+# every file allowed to construct packed pair keys; each routes its n
+# through resolve_edge_key_mode (directly or via check_edge_key_range /
+# DeviceCSR.from_edges) before packing
+_PACKED_KEY_FILES = {
+    "graphs/device.py",    # the key layer itself + CSR/sort primitives
+    "graphs/formats.py",   # host dedup — explicit int64, overflow-free
+    "core/engine.py",      # edge/dynamic lanes, delta executables
+    "core/prep.py",        # forward edge keys (host + device)
+}
+
+_PACK_RE = re.compile(
+    r"\*\s*(?:n1|nn1|\(\s*(?:(?:self|g|dg)\s*\.\s*)?n\s*\+\s*1\s*\))")
+
+
+def _code_only_lines(text):
+    """line number -> that line's code tokens joined (docstrings and
+    comments dropped), so the audit never trips on prose."""
+    import io
+    import tokenize
+    lines = {}
+    for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+        if tok.type in (tokenize.STRING, tokenize.COMMENT):
+            continue
+        if tok.type in (tokenize.NAME, tokenize.OP, tokenize.NUMBER):
+            lines.setdefault(tok.start[0], []).append(tok.string)
+    return {ln: " ".join(parts) for ln, parts in lines.items()}
+
+
+def test_every_packed_key_site_lives_in_an_audited_file():
+    """Tokenize the library and scan real code for pair-key packing
+    arithmetic: any NEW site must either land in an audited file or extend
+    this allowlist consciously (and route through resolve_edge_key_mode)."""
+    offenders = []
+    for path in SRC.rglob("*.py"):
+        rel = path.relative_to(SRC).as_posix()
+        text = path.read_text(encoding="utf-8")
+        for i, code in sorted(_code_only_lines(text).items()):
+            if _PACK_RE.search(code) and rel not in _PACKED_KEY_FILES:
+                offenders.append(f"{rel}:{i}: {code.strip()}")
+    assert not offenders, (
+        "packed-key arithmetic outside the audited files (route it "
+        "through resolve_edge_key_mode and extend _PACKED_KEY_FILES):\n"
+        + "\n".join(offenders))
+
+
+def test_the_audit_regex_is_not_vacuous():
+    """The known packing sites must trip the scanner — if a refactor
+    renames them away from ``* (n + 1)`` / ``* n1`` shapes, the audit
+    needs a matching update, not a silent pass."""
+    for rel in ("graphs/device.py", "core/engine.py", "core/prep.py"):
+        text = (SRC / rel).read_text(encoding="utf-8")
+        hits = [c for c in _code_only_lines(text).values()
+                if _PACK_RE.search(c)]
+        assert hits, f"{rel}: no packed-key sites found by the audit regex"
+
+
+def test_the_checkpoint_is_the_only_graph_too_large_raise_site():
+    raise_sites = []
+    for path in SRC.rglob("*.py"):
+        rel = path.relative_to(SRC).as_posix()
+        for i, line in enumerate(
+                path.read_text(encoding="utf-8").splitlines(), 1):
+            if re.search(r"raise\s+GraphTooLargeError", line):
+                raise_sites.append(rel)
+    assert raise_sites and set(raise_sites) == {"graphs/device.py"}, \
+        raise_sites
+    # and the checkpoint really is inside resolve_edge_key_mode
+    device_src = (SRC / "graphs" / "device.py").read_text(encoding="utf-8")
+    body = device_src.split("def resolve_edge_key_mode")[1]
+    body = body.split("\ndef ")[0]
+    assert "raise GraphTooLargeError" in body

@@ -252,8 +252,19 @@ def test_truss_plan_surface():
 
 
 def test_edge_lane_rejects_oversized_id_range():
-    with pytest.raises(ValueError, match="int32"):
-        prep_module.check_edge_key_range(1 << 20)
+    from repro.graphs import GraphTooLargeError
+
+    # n past the int32 pair-key bound now resolves to the wide lane
+    # instead of raising -- that was the capacity-bug class.
+    assert prep_module.check_edge_key_range(1 << 20) == "wide"
+    # Forcing int32 on an oversized graph still rejects, with the lane
+    # named and the typed error (a ValueError subclass, so old callers
+    # catching ValueError keep working).
+    with pytest.raises(GraphTooLargeError, match="int32"):
+        prep_module.check_edge_key_range(1 << 20, "int32")
+    # Past even the int64 bound there is no mode left.
+    with pytest.raises(GraphTooLargeError, match="int64"):
+        prep_module.check_edge_key_range(1 << 40)
 
 
 def test_listing_shims_warn_and_agree():
